@@ -1,0 +1,67 @@
+"""Fig. 11 — (a) array capacity / storage-density ablation
+(SL -> SL+selectors 4.5x -> TL 10.0x/7.2x) and (b) whole-model area
+(89.1% saved, 76 vs 6 subarrays) + energy-efficiency-per-area (11.0x,
+2.3x at equal area) on ResNet-18."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cim import MacroConfig
+from repro.core.energy import (area_and_ee_per_area, array_area_um2,
+                               array_capacity_bits, arrays_to_fit,
+                               inference_energy)
+from repro.core.mapping import resnet18_cifar, subarrays_needed
+
+from .common import save_json
+
+
+def run(verbose=True) -> dict:
+    # Fig 11(a): m=3 clusters for the ablation (paper's note)
+    cfg3 = dataclasses.replace(MacroConfig(), clusters_per_cell=3)
+    cap_sl = array_capacity_bits("sl")
+    cap_sl_sel = array_capacity_bits("sl_sel")
+    cap_tl = array_capacity_bits("tl", cfg3)
+    den_sl = cap_sl / array_area_um2("sl")
+    den_sl_sel = cap_sl_sel / array_area_um2("sl")
+    den_tl = cap_tl / array_area_um2("tl", cfg3)
+
+    layers = resnet18_cifar()
+    fig11b = area_and_ee_per_area(layers)
+
+    out = {
+        "capacity_gain_sl_sel": cap_sl_sel / cap_sl,
+        "claim_4p5x_selectors": bool(2.8 <= cap_sl_sel / cap_sl <= 5.0),
+        "capacity_gain_tl": cap_tl / cap_sl,
+        "claim_10x_capacity": bool(8.0 <= cap_tl / cap_sl <= 12.0),
+        "density_gain_tl": den_tl / den_sl,
+        "claim_7p2x_density": bool(6.0 <= den_tl / den_sl <= 8.5),
+        "resnet18_subarrays": {"tl": fig11b["tl_arrays"],
+                               "sl": fig11b["sl_arrays"]},
+        "claim_6_vs_76_subarrays": bool(fig11b["tl_arrays"] <= 8
+                                        and 60 <= fig11b["sl_arrays"] <= 90),
+        "area_saved": fig11b["area_saved"],
+        "claim_89p1_area_saved": bool(0.84 <= fig11b["area_saved"] <= 0.93),
+        "ee_per_area_gain": fig11b["ee_per_area_gain"],
+        "claim_11x_ee_per_area": bool(8.0 <= fig11b["ee_per_area_gain"]
+                                      <= 14.0),
+        "ee_per_area_same_area": fig11b["ee_per_area_gain_same_area"],
+        "claim_2p3x_same_area": bool(1.8 <= fig11b[
+            "ee_per_area_gain_same_area"] <= 2.9),
+        "paper_ref": "Fig. 11",
+    }
+    if verbose:
+        print(f"  capacity: SL+sel {out['capacity_gain_sl_sel']:.1f}x "
+              f"(paper 4.5x*), TL {out['capacity_gain_tl']:.1f}x (paper "
+              f"10.0x); density TL {out['density_gain_tl']:.1f}x (paper 7.2x)")
+        print(f"  ResNet-18: {fig11b['tl_arrays']} TL vs "
+              f"{fig11b['sl_arrays']} SL subarrays; area saved "
+              f"{fig11b['area_saved']*100:.1f}% (paper 89.1%)")
+        print(f"  EE/area: {fig11b['ee_per_area_gain']:.1f}x (paper 11.0x); "
+              f"same-area {fig11b['ee_per_area_gain_same_area']:.2f}x "
+              f"(paper 2.3x)")
+    save_json("capacity_density", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

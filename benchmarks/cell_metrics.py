@@ -1,0 +1,46 @@
+"""Table 4 — cell-level metrics: storage density 7.8x, store/restore
+energy reductions, CIM efficiency +46.6%."""
+from __future__ import annotations
+
+from repro.core.energy import C, cell_metrics
+
+from .common import save_json
+
+
+def run(verbose=True) -> dict:
+    m = cell_metrics()
+    tl, sl = m["tl"], m["sl"]
+    out = {
+        "tl": {k: float(v) for k, v in tl.items()},
+        "sl": {k: float(v) for k, v in sl.items()},
+        "density_gain": float(m["density_gain"]),
+        "claim_density_7p8x": bool(7.0 <= m["density_gain"] <= 8.5),
+        "store_energy_reduction": 1 - tl["store_energy"] / sl["store_energy"],
+        "claim_store_energy_minus_80p7": bool(
+            0.77 <= 1 - tl["store_energy"] / sl["store_energy"] <= 0.84),
+        "restore_energy_reduction":
+            1 - tl["restore_energy"] / sl["restore_energy"],
+        "claim_restore_energy_minus_45p1": bool(
+            0.42 <= 1 - tl["restore_energy"] / sl["restore_energy"] <= 0.48),
+        "cim_efficiency_gain": tl["cim_efficiency_op_per_fj"]
+            / sl["cim_efficiency_op_per_fj"] - 1,
+        "claim_cim_eff_plus_46p6": bool(
+            0.40 <= tl["cim_efficiency_op_per_fj"]
+            / sl["cim_efficiency_op_per_fj"] - 1 <= 0.52),
+        "paper_ref": "Table 4",
+    }
+    if verbose:
+        print(f"  density: {tl['density_bits_um2']:.1f} vs "
+              f"{sl['density_bits_um2']:.2f} bit/um2 -> "
+              f"{m['density_gain']:.2f}x (paper 7.8x)")
+        print(f"  store E: -{out['store_energy_reduction']*100:.1f}% "
+              f"(paper -80.7%); restore E: "
+              f"-{out['restore_energy_reduction']*100:.1f}% (paper -45.1%)")
+        print(f"  CIM eff: +{out['cim_efficiency_gain']*100:.1f}% "
+              f"(paper +46.6%)")
+    save_json("cell_metrics", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

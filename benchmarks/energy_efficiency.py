@@ -1,0 +1,52 @@
+"""Fig. 9(b) — inference energy efficiency of TL-nvSRAM-CIM vs the four
+baselines on ResNet-18 and VGG-9 (paper: 2.5x/2.9x vs b1, 1.7x/1.9x vs
+b2, 2.0x vs b3, 1.2x vs b4; 1.15x vs b4 at equal CIM energy)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.energy import C, EnergyConstants, efficiency_ratios, \
+    inference_energy
+from repro.core.mapping import resnet18_cifar, vgg9_cifar
+
+from .common import save_json
+
+
+def run(verbose=True) -> dict:
+    out = {"paper_ref": "Fig. 9(b)"}
+    claims = {
+        "resnet18": {"sram_dram": (2.3, 3.1), "sram_reram": (1.5, 2.1),
+                     "reram_cim": (1.7, 2.3), "sl": (1.05, 1.45)},
+        "vgg9": {"sram_dram": (2.3, 3.1), "sram_reram": (1.5, 2.1),
+                 "reram_cim": (1.7, 2.3), "sl": (1.05, 1.45)},
+    }
+    all_ok = True
+    for name, layers in (("resnet18", resnet18_cifar()),
+                         ("vgg9", vgg9_cifar())):
+        ratios = efficiency_ratios(layers)
+        ok = {b: claims[name][b][0] <= r <= claims[name][b][1]
+              for b, r in ratios.items()}
+        all_ok &= all(ok.values())
+        out[name] = {"ratios": {k: float(v) for k, v in ratios.items()},
+                     "in_paper_band": ok}
+        if verbose:
+            print(f"  {name}: " + "  ".join(
+                f"{b}={r:.2f}x{'' if ok[b] else ' (!)'}"
+                for b, r in ratios.items()))
+
+    # equal-CIM-energy scenario: TL still 1.15x vs SL
+    c_eq = dataclasses.replace(C, e_cbl_tl_cim=C.e_col_sram_cim)
+    layers = resnet18_cifar()
+    tl = inference_energy(layers, "tl", c=c_eq).total
+    sl = inference_energy(layers, "sl", c=c_eq).total
+    out["equal_cim_energy_vs_sl"] = float(sl / tl)
+    out["claim_1p15x_equal_cim_energy"] = bool(1.05 <= sl / tl <= 1.3)
+    out["all_claims_in_band"] = bool(all_ok)
+    if verbose:
+        print(f"  equal-CIM-energy vs SL: {sl/tl:.2f}x (paper 1.15x)")
+    save_json("energy_efficiency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

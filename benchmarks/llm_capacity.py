@@ -1,0 +1,115 @@
+"""Beyond-paper: the paper's capacity/area/energy model applied to the
+ten ASSIGNED LLM architectures.
+
+The paper evaluates ResNet-18 (11 MB) and VGG-9 (3 MB).  Modern LLMs are
+3-6 orders of magnitude larger — exactly the regime the paper's
+"accommodate all weights on-chip" argument targets.  For every assigned
+arch we derive its weight matmuls as LayerSpecs, then ask the paper's
+own model (core/energy.py):
+
+  * how many TL- vs SL-nvSRAM-CIM subarrays hold ALL weights (8b / 5t),
+  * the silicon area of each (mm²),
+  * per-token inference energy of TL vs baseline-1 (DRAM + SRAM-CIM) —
+    the ratio the paper reports as 2.5-2.9x on CNNs.
+
+MoE archs count FULL expert storage but only the routed (active)
+fraction of expert MACs per token — the paper's density pitch is
+strongest exactly there (kimi-k2: 1 TB of weights, 3.2% active/token).
+"""
+from __future__ import annotations
+
+from repro import configs
+from repro.core.energy import (array_area_um2, arrays_to_fit,
+                               inference_energy)
+from repro.core.mapping import LayerSpec, subarrays_needed
+
+from .common import save_json
+
+
+def lm_layer_specs(cfg, batch: int = 1) -> list:
+    """Weight matmuls of one decode step (`batch` tokens) as LayerSpecs.
+
+    spatial = weight-reuse per inference: `batch` for dense layers, the
+    routed token-fraction for expert layers (storage counts params
+    fully; streaming baselines only touch min(spatial, 1) of them)."""
+    d, hd = cfg.d_model, cfg.hd
+    h, kv, ff = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    L = cfg.num_layers
+    specs = []
+
+    def layer(name, cin, cout, spatial=float(batch)):
+        specs.append(LayerSpec(name, cin, cout, 1, spatial))
+
+    for prefix, n_layers in (("dec", L),) + (
+            (("enc", cfg.encoder_layers),) if cfg.encoder_layers else ()):
+        layer(f"{prefix}_wq", d * n_layers, h * hd)
+        layer(f"{prefix}_wk", d * n_layers, kv * hd)
+        layer(f"{prefix}_wv", d * n_layers, kv * hd)
+        layer(f"{prefix}_wo", h * hd * n_layers, d)
+        if cfg.num_experts:
+            frac = batch * cfg.experts_per_token / cfg.num_experts
+            layer(f"{prefix}_moe_w1", d * n_layers * cfg.num_experts, ff,
+                  frac)
+            layer(f"{prefix}_moe_w3", d * n_layers * cfg.num_experts, ff,
+                  frac)
+            layer(f"{prefix}_moe_w2", ff * n_layers * cfg.num_experts, d,
+                  frac)
+        elif ff:
+            layer(f"{prefix}_w1", d * n_layers, ff)
+            layer(f"{prefix}_w3", d * n_layers, ff)
+            layer(f"{prefix}_w2", ff * n_layers, d)
+        else:                       # xlstm: block-internal projections
+            layer(f"{prefix}_proj", d * n_layers, 4 * d)
+    layer("unembed", d, cfg.padded_vocab)
+    return specs
+
+
+BATCHES = (1, 32, 1024)
+
+
+def run(verbose=True) -> dict:
+    out = {}
+    ok_density = ok_ee = True
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        layers = lm_layer_specs(cfg)
+        mb = sum(l.params() for l in layers) / 1e6        # ~MB at 8b
+        n_tl = subarrays_needed(layers)
+        n_sl = arrays_to_fit(mb * 1e6, "sl")
+        a_tl = n_tl * array_area_um2("tl") / 1e6          # mm^2
+        a_sl = n_sl * array_area_um2("sl") / 1e6
+        ee = {}
+        for b in BATCHES:
+            lb = lm_layer_specs(cfg, b)
+            e_tl = inference_energy(lb, "tl", num_arrays=n_tl).total
+            e_b1 = inference_energy(lb, "sram_dram").total
+            ee[b] = round(e_b1 / e_tl, 2)
+        out[arch] = {
+            "weight_mb_8b": round(mb, 1),
+            "tl_subarrays": n_tl, "sl_subarrays": n_sl,
+            "tl_area_mm2": round(a_tl, 1), "sl_area_mm2": round(a_sl, 1),
+            "ee_vs_dram_by_batch": {str(b): v for b, v in ee.items()},
+        }
+        ok_density &= n_sl > 10 * n_tl
+        ok_ee &= ee[1] > 10.0 and ee[1024] > 1.0
+    out["claim_density_gain_holds_at_llm_scale"] = bool(ok_density)
+    # decode (no weight reuse) amplifies the paper's CNN-scale 2.5-2.9x
+    # advantage to >10x; large batches re-amortize DRAM streaming and
+    # converge back toward the paper's regime
+    out["claim_ee_amplified_at_batch1"] = bool(ok_ee)
+    if verbose:
+        print(f"  {'arch':22s} {'MB(8b)':>9s} {'TL arr':>8s} {'SL arr':>9s}"
+              f" {'TL mm2':>8s}  EE@b=1  b=32  b=1024")
+        for arch in configs.ARCHS:
+            r = out[arch]
+            e = r["ee_vs_dram_by_batch"]
+            print(f"  {arch:22s} {r['weight_mb_8b']:>9.0f} "
+                  f"{r['tl_subarrays']:>8d} {r['sl_subarrays']:>9d} "
+                  f"{r['tl_area_mm2']:>8.0f} {e['1']:>7.1f} {e['32']:>5.1f}"
+                  f" {e['1024']:>6.1f}")
+    save_json("llm_capacity", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Fig. 6 — Monte-Carlo restore yield.
+
+(a) TL-nvSRAM-CIM yield vs ReRAMs-per-cluster n: stays >= 94% up to n=60.
+(b) yield vs cluster count m at n=60.
+Contrast: SL-nvSRAM-CIM voltage-divider yield collapses as n grows
+(the reason [12] stops at n=6).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.yield_model import (cluster_sweep, sl_restore_yield,
+                                    tl_restore_yield, yield_sweep)
+
+from .common import save_json
+
+NS = (6, 12, 18, 30, 45, 60)
+
+
+def run(verbose=True, num_mc=8192) -> dict:
+    key = jax.random.key(42)
+    tl = {n: tl_restore_yield(jax.random.fold_in(key, n), n, 4, num_mc)
+          for n in NS}
+    sl = {n: sl_restore_yield(jax.random.fold_in(key, 100 + n), n, num_mc)
+          for n in NS}
+    ms = cluster_sweep(jax.random.fold_in(key, 7), ms=(1, 2, 3, 4), n=60,
+                       num_mc=num_mc)
+    out = {
+        "tl_yield_vs_n": {n: v["weighted"] for n, v in tl.items()},
+        "tl_min_state_vs_n": {n: v["min_state"] for n, v in tl.items()},
+        "sl_yield_vs_n": {n: v["weighted"] for n, v in sl.items()},
+        "tl_yield_vs_m": {m: v["weighted"] for m, v in ms.items()},
+        "claim_tl_above_94_at_60": bool(tl[60]["weighted"] >= 0.94),
+        "claim_sl_degrades": bool(sl[60]["weighted"] < sl[6]["weighted"]),
+        "paper_ref": "Fig. 6",
+    }
+    if verbose:
+        print("  n:      " + "  ".join(f"{n:6d}" for n in NS))
+        print("  TL:     " + "  ".join(f"{out['tl_yield_vs_n'][n]:.4f}"
+                                       for n in NS))
+        print("  SL:     " + "  ".join(f"{out['sl_yield_vs_n'][n]:.4f}"
+                                       for n in NS))
+        print(f"  TL>=94% @ n=60: {out['claim_tl_above_94_at_60']}; "
+              f"SL degrades: {out['claim_sl_degrades']}")
+    save_json("restore_yield", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

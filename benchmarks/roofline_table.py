@@ -1,0 +1,84 @@
+"""§Roofline — aggregate the dry-run JSONs into the per-cell roofline
+table (terms in ms, dominant bottleneck, useful-flops ratio, roofline
+fraction) and emit markdown for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bottleneck | useful | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def load_cells(mesh: str | None = None, include_tagged: bool = False):
+    cells = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return cells
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if not name.endswith(".json"):
+            continue
+        parts = name[:-5].split("__")
+        if not include_tagged and len(parts) > 3:
+            continue                      # perf-iteration snapshots
+        with open(os.path.join(DRYRUN_DIR, name)) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def row(d: dict) -> str:
+    if "skipped" in d:
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | "
+                f"skipped | — | — |")
+    return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{d['t_compute']*1e3:.1f} | {d['t_memory']*1e3:.1f} | "
+            f"{d['t_collective']*1e3:.1f} | {d['bottleneck']} | "
+            f"{d['useful_ratio']:.2f} | {d['peak_fraction']:.3f} |")
+
+
+def run(verbose=True, mesh="16x16") -> dict:
+    cells = load_cells(mesh)
+    lines = [HEADER] + [row(c) for c in cells]
+    table = "\n".join(lines)
+    ran = [c for c in cells if "skipped" not in c]
+    skipped = [c for c in cells if "skipped" in c]
+    by_bottleneck = {}
+    for c in ran:
+        by_bottleneck.setdefault(c["bottleneck"], []).append(
+            f"{c['arch']}/{c['shape']}")
+    worst = sorted(ran, key=lambda c: c["peak_fraction"])[:5]
+    most_coll = sorted(ran, key=lambda c: -c["t_collective"] /
+                       max(c["t_compute"] + c["t_memory"], 1e-12))[:5]
+    out = {
+        "mesh": mesh,
+        "cells_ran": len(ran),
+        "cells_skipped": len(skipped),
+        "bottleneck_histogram": {k: len(v) for k, v in
+                                 by_bottleneck.items()},
+        "worst_roofline_fraction": [
+            {"cell": f"{c['arch']}/{c['shape']}",
+             "frac": c["peak_fraction"]} for c in worst],
+        "most_collective_bound": [
+            {"cell": f"{c['arch']}/{c['shape']}",
+             "coll_ms": c["t_collective"] * 1e3} for c in most_coll],
+        "table_markdown": table,
+    }
+    if verbose:
+        print(f"  {len(ran)} cells ran, {len(skipped)} skipped "
+              f"({mesh}); bottlenecks: {out['bottleneck_histogram']}")
+        for w in out["worst_roofline_fraction"][:3]:
+            print(f"  worst roofline: {w['cell']} frac={w['frac']:.3f}")
+    from .common import save_json
+    save_json(f"roofline_table_{mesh}", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    run(mesh="2x16x16")

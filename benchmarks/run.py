@@ -1,0 +1,68 @@
+"""Run every paper-table/figure benchmark:  python -m benchmarks.run
+
+Each module reproduces one table/figure of TL-nvSRAM-CIM (DAC'23) and
+returns a dict with the measured values + per-claim pass booleans; the
+aggregate summary is printed at the end and written to
+experiments/benchmarks/summary.json.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from . import (accuracy_yield, adc_noise, capacity_density, cell_metrics,
+               energy_efficiency, kernel_bench, llm_capacity, quantization,
+               restore_yield, roofline_table, throughput)
+from .common import save_json
+
+SUITES = [
+    ("quantization (Table 3)", quantization.run),
+    ("restore_yield (Fig. 6)", restore_yield.run),
+    ("cell_metrics (Table 4)", cell_metrics.run),
+    ("throughput (Fig. 9a)", throughput.run),
+    ("energy_efficiency (Fig. 9b)", energy_efficiency.run),
+    ("capacity_density (Fig. 11)", capacity_density.run),
+    ("accuracy_yield (Fig. 10)", accuracy_yield.run),
+    ("adc_noise (beyond-paper ablation)", adc_noise.run),
+    ("llm_capacity (paper model @ assigned archs)", llm_capacity.run),
+    ("kernel_bench (TPU adaptation)", kernel_bench.run),
+    ("roofline_table (dry-run)", roofline_table.run),
+]
+
+
+def main() -> int:
+    summary = {}
+    failed = []
+    for name, fn in SUITES:
+        print(f"== {name}")
+        t0 = time.monotonic()
+        try:
+            res = fn(verbose=True)
+            claims = {k: v for k, v in res.items()
+                      if k.startswith("claim_") or k.endswith("_reproduced")
+                      or k in ("all_match_oracle", "all_claims_in_band")}
+            bad = [k for k, v in claims.items() if v is False]
+            summary[name] = {"seconds": round(time.monotonic() - t0, 1),
+                             "claims": claims, "failed_claims": bad}
+            if bad:
+                failed.append((name, bad))
+        except Exception as e:  # keep the suite running
+            summary[name] = {"error": repr(e)}
+            failed.append((name, [repr(e)]))
+            import traceback
+            traceback.print_exc()
+        print()
+    print("=" * 64)
+    total_claims = sum(len(s.get("claims", {})) for s in summary.values())
+    bad_claims = sum(len(s.get("failed_claims", [])) for s in summary.values())
+    print(f"benchmarks: {len(SUITES)} suites, {total_claims} paper-claim "
+          f"checks, {bad_claims} outside band")
+    for name, bad in failed:
+        print(f"  !! {name}: {bad}")
+    save_json("summary", summary)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Fig. 9(a) + §4.3 — peak throughput: TC(5t) vs BC(8b) = 1.3x, and the
+256x250 TC array reaching BC parity with 21.9% fewer ADCs."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cim import MacroConfig
+from repro.core.energy import macs_per_cycle, peak_throughput_ratio
+
+from .common import save_json
+
+
+def run(verbose=True) -> dict:
+    ratio = peak_throughput_ratio()
+    # §4.3: the 256x250 TC array — 250 SRAM cols = 125 trit cols = 25 ADCs
+    small = dataclasses.replace(MacroConfig(), sram_cols=250)
+    tc_small = macs_per_cycle(small.adcs, small.rows_active, 5)
+    bc = macs_per_cycle(32, 32, 8)
+    out = {
+        "tc_macs_per_cycle": macs_per_cycle(32, 16, 5),
+        "bc_macs_per_cycle": bc,
+        "ratio": float(ratio),
+        "claim_1p3x": bool(1.2 <= ratio <= 1.4),
+        "tc_250col_macs_per_cycle": tc_small,
+        "tc_250col_parity": bool(abs(tc_small / bc - 1.0) < 0.05),
+        "adc_reduction_250col": 1 - small.adcs / 32,
+        "claim_adc_minus_21p9": bool(abs((1 - small.adcs / 32) - 0.219)
+                                     < 0.01),
+        "paper_ref": "Fig. 9(a), §4.3",
+    }
+    if verbose:
+        print(f"  TC 20.48 vs BC 16 MAC/cycle -> {ratio:.2f}x (paper 1.3x)")
+        print(f"  250-col TC: {tc_small:.1f} MAC/cycle (parity: "
+              f"{out['tc_250col_parity']}), ADCs -"
+              f"{out['adc_reduction_250col']*100:.1f}% (paper -21.9%)")
+    save_json("throughput", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Fault-tolerant training demo — train a small LM on the synthetic
+chain task with periodic checkpoints WHILE a failure plan kills the
+"node" twice (once mid-step, once mid-checkpoint-save); the runner
+restarts from the latest atomic checkpoint each time and the final
+parameters are bit-identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/train_ft.py [--steps 60]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+
+from repro import configs
+from repro.data import DataConfig, entropy_floor
+from repro.models import registry
+from repro.optim import adamw, warmup_cosine
+from repro.train import FailurePlan, Trainer, TrainerConfig
+
+
+def run(steps, ckpt_dir, plan=None, seed=3):
+    cfg = configs.smoke("xlstm-125m")
+    model = registry.build(cfg)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                      global_batch=8, seed=seed)
+    tcfg = TrainerConfig(total_steps=steps, ckpt_dir=ckpt_dir,
+                         ckpt_interval=10, seed=seed)
+    opt = adamw(warmup_cosine(3e-3, 5, steps))
+    tr = Trainer(model, opt, data, tcfg, failure_plan=plan)
+    state = tr.run()
+    return tr, state, data
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=60)
+    args = p.parse_args()
+
+    d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        print("== reference run (no failures)")
+        ref_tr, ref_state, data = run(args.steps, d1)
+        print(f"   loss {ref_tr.history[0]['loss']:.3f} -> "
+              f"{ref_tr.history[-1]['loss']:.3f} "
+              f"(entropy floor ~{entropy_floor(data):.3f})")
+
+        mid = args.steps // 2
+        plan = FailurePlan(crash_at=(mid,), crash_in_save=(mid + 10,))
+        print(f"== faulty run (crash at step {mid}, crash-in-save at "
+              f"{mid + 10})")
+        tr, state, _ = run(args.steps, d2, plan)
+        print(f"   restarts: {tr.restarts}; loss "
+              f"{tr.history[-1]['loss']:.3f}")
+
+        same = all(
+            bool(jax.numpy.array_equal(a, b))
+            for a, b in zip(jax.tree.leaves(ref_state.params),
+                            jax.tree.leaves(state.params)))
+        print(f"== final params identical to uninterrupted run: {same}")
+        assert same
+    finally:
+        shutil.rmtree(d1, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""glm4-9b — dense transformer with extreme GQA (kv=2).
+
+[hf:THUDM/glm-4-9b] 40L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=151552.  kv=2 stresses the TP sharding rules: a 16-way model axis
+cannot split 2 kv heads, so wk/wv fall back to replicated (the
+divisibility invariant in dist.sharding).  Full attention -> long_500k
+skipped.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151552,
+    rope_theta=1e6,
+    remat="full",
+)
+
+SMOKE = ModelConfig(
+    name="glm4-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=128,
+    vocab_size=512,
+)

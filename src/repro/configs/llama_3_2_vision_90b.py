@@ -1,0 +1,37 @@
+"""llama-3.2-vision-90b — dense decoder with cross-attention image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision scaled] 100L d_model=8192 64H
+(GQA kv=8) d_ff=28672 vocab=128256; a gated cross-attention block every
+5th layer attends to precomputed patch embeddings (vision frontend is a
+stub per the assignment: input_specs() provides 1601 patch embeddings).
+Full attention -> long_500k skipped.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    cross_attn_every=5,
+    encoder_seq=1601,
+    rope_theta=500000.0,
+    remat="full",
+)
+
+SMOKE = ModelConfig(
+    name="llama-vision-smoke",
+    family="vlm",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    cross_attn_every=2,
+    encoder_seq=16,
+)

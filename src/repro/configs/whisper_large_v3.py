@@ -1,0 +1,36 @@
+"""whisper-large-v3 — encoder-decoder transformer, conv frontend stubbed.
+
+[arXiv:2212.04356] 32L (decoder; 32 encoder layers too) d_model=1280
+20H (kv=20) d_ff=5120 vocab=51866.  input_specs() supplies precomputed
+frame embeddings (1500 frames = 30 s of audio at 50 Hz after the conv
+stem); the conv frontend itself is a stub per the assignment.
+Full attention -> long_500k skipped; decode runs (enc-dec has a decoder).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    encoder_layers=32,
+    encoder_seq=1500,
+    remat="full",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    encoder_layers=2,
+    encoder_seq=32,
+)

@@ -1,0 +1,37 @@
+"""zamba2-7b — Mamba2 backbone + shared (weight-tied) attention+MLP block.
+
+[arXiv:2411.15242] 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000 ssm_state=64.  The shared transformer block runs after every
+6 Mamba2 layers (weights tied across invocations; separate KV caches).
+Sub-quadratic (SSM state) -> runs long_500k.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_kind="mamba2",
+    attn_every=6,
+    remat="full",
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke",
+    family="hybrid",
+    num_layers=6,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_kind="mamba2",
+    attn_every=3,
+)

@@ -1,0 +1,11 @@
+"""Core: the paper's contribution (TL-nvSRAM-CIM) as composable JAX modules."""
+from . import (cim, device_models, energy, error_injection, mapping, packing,
+               ternary, yield_model)
+from .cim import MacroConfig, cim_matmul, cim_matmul_int
+from .ternary import TernaryTensor, encode_inputs, ternarize
+
+__all__ = [
+    "cim", "device_models", "energy", "error_injection", "mapping",
+    "packing", "ternary", "yield_model", "MacroConfig", "cim_matmul",
+    "cim_matmul_int", "TernaryTensor", "encode_inputs", "ternarize",
+]

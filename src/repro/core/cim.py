@@ -1,0 +1,204 @@
+"""Bit-exact functional model of the TL-nvSRAM-CIM macro (Figs. 3-5, §3).
+
+The macro computes y = x @ w with ternary-coded operands:
+
+* weights: q_w balanced trits, each trit restored into a PAIR of 6T SRAM
+  cells (Q1Q2 per Table 1);
+* inputs: q_i balanced trits driven serially (IN1/IN2 per Table 1), one
+  trit per CIM cycle;
+* 16 rows activated at a time; each row contributes 1 - x*w discharge
+  paths to the shared CBL (differential scheme: 2 paths for product -1,
+  1 for 0, 0 for +1), so the CBL *count* for a 16-row group lies in
+  [0, 32] and is sensed by a 5-bit ADC (32 codes -> the single extreme
+  count 32 saturates at 31; this is the macro's only intrinsic
+  nonideality and is faithfully modeled);
+* a shift-&-add combines trit positions with powers of 3 and row groups
+  by plain summation.
+
+With ``adc_bits`` large enough the model reduces EXACTLY to the integer
+matmul of the quantized operands — a property tested in
+tests/test_cim_macro.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ternary import (TernaryTensor, encode_inputs, from_balanced_ternary,
+                      signals_to_weight_trit, ternarize, weight_signals)
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroConfig:
+    """TL-nvSRAM-CIM macro parameters (defaults: the paper's 256x320 array)."""
+    rows: int = 256                # SRAM rows per subarray
+    sram_cols: int = 320           # SRAM columns (2 per trit column)
+    rows_active: int = 16          # rows accumulated per CBL sense
+    adc_bits: int = 5              # ADC resolution (counts domain)
+    cbls_per_adc: int = 5          # ADC sharing (mux ratio)
+    num_trits: int = 5             # trits per weight / input
+    clusters_per_cell: int = 4     # m
+    rerams_per_cluster: int = 60   # n
+    num_subarrays: int = 6
+
+    @property
+    def trit_cols(self) -> int:           # weight-trit columns (= CBLs)
+        return self.sram_cols // 2
+
+    @property
+    def weights_per_row(self) -> int:
+        return self.trit_cols // self.num_trits
+
+    @property
+    def adcs(self) -> int:
+        return self.trit_cols // self.cbls_per_adc
+
+    @property
+    def trits_per_cell(self) -> int:      # ReRAM capacity behind one trit position
+        return self.clusters_per_cell * self.rerams_per_cluster
+
+    @property
+    def subarray_weight_capacity_trits(self) -> int:
+        return self.rows * self.trit_cols * self.trits_per_cell
+
+    def row_groups(self, k: int) -> int:
+        return -(-k // self.rows_active)
+
+
+def adc_transfer(count: jax.Array, adc_bits: int, noise: Optional[jax.Array] = None) -> jax.Array:
+    """CBL count -> ADC code.  Counts live in [0, 2*rows_active]; a b-bit ADC
+    has 2**b codes. Optional additive noise (in LSB) models readout noise."""
+    x = count.astype(jnp.float32)
+    if noise is not None:
+        x = x + noise
+    code = jnp.clip(jnp.round(x), 0, 2**adc_bits - 1)
+    return code.astype(jnp.int32)
+
+
+def cim_matmul_int(x_trits: jax.Array, w_trits: jax.Array, cfg: MacroConfig,
+                   adc_noise_sigma: float = 0.0,
+                   key: Optional[jax.Array] = None) -> jax.Array:
+    """Integer CIM matmul over trit planes.
+
+    x_trits: (q_i, B, K) int8; w_trits: (q_w, K, N) int8 -> (B, N) int32
+    equal (up to ADC saturation/noise) to sum_ij 3^{i+j} (x_i @ w_j).
+    """
+    qi, b, k = x_trits.shape
+    qw, k2, n = w_trits.shape
+    assert k == k2, (k, k2)
+    ra = cfg.rows_active
+    g = cfg.row_groups(k)
+    pad = g * ra - k
+    if pad:
+        x_trits = jnp.pad(x_trits, ((0, 0), (0, 0), (0, pad)))
+        w_trits = jnp.pad(w_trits, ((0, 0), (0, pad), (0, 0)))
+    xg = x_trits.reshape(qi, b, g, ra)
+    wg = w_trits.reshape(qw, g, ra, n)
+    # raw per-group MAC:  (qi, qw, B, G, N)
+    mac = jnp.einsum("ibgr,jgrn->ijbgn", xg.astype(jnp.int32), wg.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    # number of active rows with a non-zero input trit in each group drives
+    # the count offset: count = sum_r active_r * (1 - x_r w_r) over rows the
+    # input driver actually pulls (x may be 0 -> still 1 path; inactive pad
+    # rows contribute 0 paths). Padded rows are modeled as deactivated.
+    rows_real = jnp.minimum(ra, jnp.maximum(0, k - jnp.arange(g) * ra))  # (G,)
+    count = rows_real[None, None, None, :, None] - mac
+    if adc_noise_sigma > 0.0:
+        assert key is not None, "adc noise requires a PRNG key"
+        noise = adc_noise_sigma * jax.random.normal(key, count.shape)
+    else:
+        noise = None
+    code = adc_transfer(count, cfg.adc_bits, noise)
+    mac_q = rows_real[None, None, None, :, None] - code
+    # shift & add over trit positions (powers of 3) and sum over groups
+    p3i = jnp.array([3**i for i in range(qi)], dtype=jnp.int32)
+    p3j = jnp.array([3**j for j in range(qw)], dtype=jnp.int32)
+    scale = p3i[:, None] * p3j[None, :]                       # (qi, qw)
+    return jnp.einsum("ij,ijbn->bn", scale, mac_q.sum(axis=3))
+
+
+def cim_matmul(x: jax.Array, w: jax.Array, cfg: MacroConfig = MacroConfig(),
+               method: str = "truncate", adc_noise_sigma: float = 0.0,
+               key: Optional[jax.Array] = None,
+               w_ternary: Optional[TernaryTensor] = None) -> jax.Array:
+    """Float-in/float-out CIM matmul: quantize -> trit MAC -> rescale.
+
+    x: (B, K) float; w: (K, N) float (or pre-ternarized via w_ternary).
+    """
+    xt = encode_inputs(x, cfg.num_trits)
+    wt = w_ternary if w_ternary is not None else ternarize(w, cfg.num_trits, method=method)
+    y_int = cim_matmul_int(xt.trits, wt.trits, cfg, adc_noise_sigma, key)
+    return y_int.astype(jnp.float32) * xt.scale * wt.scale
+
+
+# ----------------------------------------------------------------------
+# Store / restore state machine (Table 2, Figs. 4-5) — behavioural model.
+# ----------------------------------------------------------------------
+
+# Signal settings of Table 2, kept as data so tests can assert the modes.
+VDD, VDDH, VDDL, VSTR = 0.9, 1.5, 0.6, 0.31
+SIGNAL_TABLE = {
+    ("store", 1):   dict(SEL_i=VDDH, SL_j=0.0, SL_x=VDDL, RSTR=0.0, STR1=0.0, STR2=0.0, CBL=VDDH),
+    ("store", 2):   dict(SEL_i=VDDH, SL_j=VDDH, SL_x=VDDL, RSTR=0.0, STR1=VDD, STR2=VSTR, CBL=None),
+    ("restore", 1): dict(SEL_i=0.0, SL_j=VDDL, SL_x=VDDL, RSTR=0.0, STR1=0.0, STR2=0.0, CBL=None),
+    ("restore", 2): dict(SEL_i=VDD, SL_j=0.0, SL_x=VDDL, RSTR=VDD, STR1=0.0, STR2=0.0, CBL=None),
+    ("cim", 0):     dict(SEL_i=0.0, SL_j=VDDL, SL_x=VDDL, RSTR=0.0, STR1="INB2", STR2="INB1", CBL="MAC"),
+}
+
+# ReRAM levels
+HRS, MRS, LRS = 0, 1, 2
+TRIT_TO_LEVEL = {-1: HRS, 0: MRS, 1: LRS}
+LEVEL_TO_TRIT = {HRS: -1, MRS: 0, LRS: 1}
+
+
+def store_trits_to_levels(trits: jax.Array) -> jax.Array:
+    """Store mode: SRAM pair (Q1,Q2) -> conditional set current -> level.
+
+    Phase 1 resets the selected ReRAM to HRS; phase 2 produces set current
+    I00 (-> LRS) for Q1Q2=00, I10 (-> MRS) for 10, none (stay HRS) for 11.
+    """
+    q1, q2 = weight_signals(trits)
+    level = jnp.where((q1 == 0) & (q2 == 0), LRS,
+                      jnp.where((q1 == 1) & (q2 == 0), MRS, HRS))
+    return level.astype(jnp.int8)
+
+
+def restore_levels_to_trits(levels: jax.Array,
+                            resistances: Optional[jax.Array] = None,
+                            g_leak: float | jax.Array = 0.0,
+                            g_ref: Optional[tuple] = None,
+                            cmp_noise: Optional[tuple[jax.Array, jax.Array]] = None,
+                            device=None) -> jax.Array:
+    """Restore mode: ReRAM level (+ sampled resistance) -> (Q1, Q2) -> trit.
+
+    With no variation arguments this is the ideal restore (exact inverse of
+    store).  With `resistances` (ohms, same shape as levels) and leak /
+    reference conductances it runs the differential-discharge comparison of
+    §3.4 and may make errors — exactly what the yield model measures.
+    """
+    if resistances is None:
+        q1 = (levels != LRS)
+        q2 = (levels == HRS)
+        return signals_to_weight_trit(q1.astype(jnp.int8), q2.astype(jnp.int8))
+    from . import device_models as dm
+    d = device or dm.DeviceParams()
+    g_cell = dm.discharge_conductance(resistances, d) + g_leak
+    if g_ref is None:
+        g_ref = dm.reference_conductances(d)
+    g_ref1, g_ref2, g_ref3 = g_ref
+    n1 = n2 = 0.0
+    if cmp_noise is not None:
+        n1, n2 = cmp_noise
+    q1 = (g_cell + n1 < g_ref1)                    # R above ref1 -> Q1=1
+    q2_hi = (g_cell + n2 < g_ref2)                 # Q1=1 branch (VREF2)
+    q2_lo = (g_cell + n2 < g_ref3)                 # Q1=0 branch (VREF3)
+    q2 = jnp.where(q1, q2_hi, q2_lo)
+    return signals_to_weight_trit(q1.astype(jnp.int8), q2.astype(jnp.int8))
+
+
+def roundtrip_store_restore(trits: jax.Array, **restore_kw) -> jax.Array:
+    """store -> (ideal or varied) restore; identity when ideal."""
+    return restore_levels_to_trits(store_trits_to_levels(trits), **restore_kw)

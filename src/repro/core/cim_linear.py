@@ -1,0 +1,93 @@
+"""CIMLinear — the paper's technique as a drop-in linear layer.
+
+Execution modes (config: ``cim.mode``):
+  'float'    — plain bf16/f32 matmul (reference / training).
+  'ternary'  — packed-ternary fast path via kernels.ternary_matmul:
+               base3 (paper's 5-trit, 2x denser) or trit2 (1-trit, 8x).
+               This is the production serving path.
+  'exact'    — macro-exact simulation via kernels.cim_mac (row groups +
+               5-bit ADC); for accuracy studies, incl. restore-error
+               injection at a given yield.
+
+The weights of any architecture in repro.models can be converted with
+:func:`ternarize_params` — the technique is weight-storage-level and
+applies to every matmul in the framework (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    mode: str = "float"            # float | ternary | exact
+    packing: str = "base3"         # base3 | trit2 (ternary mode)
+    num_trits: int = 5
+    adc_bits: int = 5              # exact mode
+    restore_yield: Optional[tuple] = None   # per-state yields -> error inject
+    interpret: Optional[bool] = None
+    backend: str = "auto"          # auto (pallas) | xla — ternary mode
+
+
+def linear(x: jax.Array, w: Any, cfg: CIMConfig = CIMConfig()) -> jax.Array:
+    """Apply a linear layer under the configured CIM mode.
+
+    `w` is a float (K, N) array in float/exact modes, or a
+    kernels.ops.PackedTernary in ternary mode."""
+    from repro.kernels import ops
+    if cfg.mode == "ternary" or isinstance(w, ops.PackedTernary):
+        pw = w if isinstance(w, ops.PackedTernary) else ops.pack_weights(
+            w, cfg.packing, cfg.num_trits)
+        return ops.ternary_matmul(x, pw, interpret=cfg.interpret,
+                                  backend=cfg.backend)
+    if cfg.mode == "float":
+        return x @ w
+    if cfg.mode == "exact":
+        return ops.cim_matmul(x, w, adc_bits=cfg.adc_bits,
+                              num_trits=cfg.num_trits, interpret=cfg.interpret)
+    return x @ w
+
+
+def ternarize_params(params: Any, cfg: CIMConfig,
+                     predicate=None) -> Any:
+    """Convert every matmul weight in a pytree to PackedTernary.
+
+    predicate(path, leaf) -> bool selects which weights convert (default:
+    2-D or layer-stacked 3-D float arrays with trailing dims >= 64;
+    embedding tables and norms stay float, like the paper keeps
+    peripheral logic digital)."""
+    from repro.kernels import ops
+
+    def default_pred(path, x):
+        name = str(getattr(path[-1], "key", path[-1])) if path else ""
+        return (isinstance(x, jax.Array) and x.ndim in (2, 3, 4)
+                and x.dtype in (jnp.float32, jnp.bfloat16)
+                and min(x.shape[-2:]) >= 64
+                and name not in ("embed", "router"))
+
+    pred = predicate or default_pred
+
+    def convert(path, x):
+        if pred(path, x):
+            return ops.pack_weights(x, cfg.packing, cfg.num_trits)
+        return x
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def hbm_bytes(params: Any) -> int:
+    """Total HBM bytes of a (possibly packed) parameter tree — the
+    density metric of Table 4 at model level."""
+    from repro.kernels import ops
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, ops.PackedTernary)):
+        if isinstance(leaf, ops.PackedTernary):
+            total += leaf.data.size + leaf.scale.size * 4
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

@@ -1,0 +1,152 @@
+"""Device models: TL-ReRAM, bidirectional selector, CMOS mismatch (§3.2/3.4).
+
+Constants are the paper's (Table 2 footnote and §3.2):
+  LRS 80 kΩ, HRS 1 MΩ, MRS = argmax min(MRS/LRS, HRS/MRS) ≈ 282 kΩ;
+  selector V_IMT 0.45 V, V_MIT 25 mV, R_metallic 40 kΩ, R_insulating 0.12 GΩ;
+  ReRAM variation: filament-gap 3σ/μ = 10 %;
+  V_DD 0.9 V, V_DDH 1.5 V, V_DDL 0.6 V, V_STR 0.31 V.
+
+Calibration note (DESIGN.md §2): the paper runs SPICE Monte-Carlo; we use
+an analytic discharge-current model.  Gap variation maps to log-resistance
+variation through the exponential gap→R law, so R is lognormal with
+σ_lnR = (3σ/μ-gap / 3) · ln(HRS/LRS) · κ, κ = 1 (the gap modulates the
+full tunneling-resistance dynamic range).  CMOS mismatch enters as a
+Gaussian comparator/current offset.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceParams:
+    r_lrs: float = 80e3
+    r_hrs: float = 1e6
+    r_mrs: float | None = None          # None -> derived optimal (≈282.8 kΩ)
+    # selector (bidirectional, IMT/MIT)
+    v_imt: float = 0.45
+    v_mit: float = 0.025
+    r_sel_metallic: float = 40e3
+    r_sel_insulating: float = 0.12e9
+    # access/discharge transistor on-resistance (28 nm core device)
+    r_nmos: float = 10e3
+    # variations
+    gap_3sigma_over_mu: float = 0.10    # paper: 10 %
+    cmos_sigma_rel: float = 0.03        # discharge-current mismatch (σ/I)
+    comparator_sigma_siemens: float = 0.10e-6  # latch input-referred offset
+    # supplies
+    vdd: float = 0.9
+    vddh: float = 1.5
+    vddl: float = 0.6
+    vstr: float = 0.31
+
+    @property
+    def mrs(self) -> float:
+        if self.r_mrs is not None:
+            return self.r_mrs
+        return optimal_mrs(self.r_lrs, self.r_hrs)
+
+    @property
+    def sigma_ln_r(self) -> float:
+        return (self.gap_3sigma_over_mu / 3.0) * math.log(self.r_hrs / self.r_lrs)
+
+
+def optimal_mrs(r_lrs: float, r_hrs: float) -> float:
+    """MRS maximizing min(MRS/LRS, HRS/MRS) -> geometric mean (§3.2: 282 kΩ)."""
+    return math.sqrt(r_lrs * r_hrs)
+
+
+def level_resistance(level: jax.Array, d: DeviceParams) -> jax.Array:
+    """ReRAM level (0=HRS,1=MRS,2=LRS) -> nominal resistance."""
+    table = jnp.array([d.r_hrs, d.mrs, d.r_lrs])
+    return table[level]
+
+
+def sample_resistance(level: jax.Array, key: jax.Array, d: DeviceParams,
+                      shape=()) -> jax.Array:
+    """Lognormal resistance sample around the level's nominal value."""
+    nominal = level_resistance(level, d)
+    z = jax.random.normal(key, shape if shape else jnp.shape(nominal))
+    return nominal * jnp.exp(d.sigma_ln_r * z)
+
+
+def discharge_conductance(r_reram, d: DeviceParams,
+                          cmos_rel: jax.Array | float = 0.0) -> jax.Array:
+    """Conductance of the Q-node discharge path: ReRAM in series with the
+    metallic selector and the restore NMOS; CMOS mismatch scales current."""
+    g = 1.0 / (r_reram + d.r_sel_metallic + d.r_nmos)
+    return g * (1.0 + cmos_rel)
+
+
+def leakage_conductance(n: int, m: int, d: DeviceParams,
+                        sel_off_leak: float = 2e-9) -> float:
+    """Parasitic discharge through the (n-1) unselected insulating selectors
+    of the active cluster plus the (m-1) off clusters' SEL transistors.
+    This is the term that grows with cluster size n and ultimately bounds
+    restore yield (Fig. 6) — but only ~0.5 µS even at n = 60, versus the
+    collapsing margins of the voltage-divider select scheme of [12]."""
+    g_unsel = (n - 1) / d.r_sel_insulating
+    g_off_clusters = (m - 1) * sel_off_leak
+    return g_unsel + g_off_clusters
+
+
+def reference_conductances(d: DeviceParams) -> tuple[float, float, float]:
+    """V_REF1/2/3 ladders (serially connected ReRAMs, §3.2) as discharge
+    conductances.  ref1 splits LRS|MRS, ref2 splits MRS|HRS, ref3 sits far
+    above LRS so the Q1=0 branch always resolves Q2=0."""
+    r1 = math.sqrt(d.r_lrs * d.mrs)
+    r2 = math.sqrt(d.mrs * d.r_hrs)
+    r3 = 8.0 * d.r_lrs
+    def g(r):
+        return 1.0 / (r + d.r_sel_metallic + d.r_nmos)
+    return g(r1), g(r2), g(r3)
+
+
+def sample_reference_conductances(key: jax.Array, d: DeviceParams, shape=()):
+    """Reference ladders are built from ReRAMs too -> they vary.  Two series
+    devices halve the variance of ln R (σ/√2)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    sig = d.sigma_ln_r / math.sqrt(2.0)
+    r1 = math.sqrt(d.r_lrs * d.mrs) * jnp.exp(sig * jax.random.normal(k1, shape))
+    r2 = math.sqrt(d.mrs * d.r_hrs) * jnp.exp(sig * jax.random.normal(k2, shape))
+    r3 = 8.0 * d.r_lrs * jnp.exp(sig * jax.random.normal(k3, shape))
+    def g(r):
+        return 1.0 / (r + d.r_sel_metallic + d.r_nmos)
+    return g(r1), g(r2), g(r3)
+
+
+# ---------------- SL-nvSRAM-CIM voltage-divider select scheme [12] -------
+
+def sl_divider_voltage(r_selected: jax.Array, r_unselected: jax.Array,
+                       v: float = 0.9) -> jax.Array:
+    """Voltage-divider readout of the previous SL-nvSRAM-CIM: the selected
+    SL-ReRAM in series with the parallel combination of the (n-1)
+    unselected ones.  V_X = V · R_par / (R_sel + R_par); r_unselected has
+    shape (..., n-1)."""
+    r_par = 1.0 / jnp.sum(1.0 / r_unselected, axis=-1)
+    return v * r_par / (r_selected + r_par)
+
+
+def sl_nominal_threshold(n: int, d: DeviceParams, v: float = 0.9,
+                         n_design: int = 6) -> float:
+    """Fixed SRAM trip voltage for the SL voltage-divider scheme [12].
+
+    The divider output V_X drives the SRAM cell's restore node, whose trip
+    point is FIXED by the CMOS design — [12] sized it for its silicon
+    configuration of 6 SL-ReRAMs per group.  The returned value is the
+    midpoint of the nominal HRS/LRS divider outputs at `n_design` with a
+    balanced unselected population.  As the actual n grows past the design
+    point, V_X(LRS) slides below this trip voltage and restore collapses —
+    the scalability wall of §2.2.  (Pure Python: usable inside jitted
+    callers with concrete n.)"""
+    nd = n_design
+    half = max(1, (nd - 1) // 2)
+    g_par = half / d.r_lrs + max(0, nd - 1 - half) / d.r_hrs
+    r_par = 1.0 / g_par
+    v_h = v * r_par / (d.r_hrs + r_par)
+    v_l = v * r_par / (d.r_lrs + r_par)
+    return (v_h + v_l) / 2.0

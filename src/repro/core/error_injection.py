@@ -1,0 +1,48 @@
+"""Yield-driven trit-error injection (Fig. 10 methodology).
+
+The paper evaluates NN accuracy by injecting bit errors "induced by
+incorrect restore operations" into the weight matrix at the measured
+restore-yield rate, then retraining.  Failures are *boundary* events:
+a state is misread as the neighboring state whose decision margin was
+violated (HRS<->MRS via V_REF2, MRS<->LRS via V_REF1); double-boundary
+errors are second-order and ignored.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ternary import TernaryTensor
+
+
+def confusion_from_yields(per_state: jax.Array) -> jax.Array:
+    """(3,) per-state yields [HRS(-1), MRS(0), LRS(+1)] -> (3,3) confusion
+    matrix rows=true (index = trit+1), cols=read."""
+    y_h, y_m, y_l = per_state[0], per_state[1], per_state[2]
+    # -1 fails -> read as 0; +1 fails -> read as 0; 0 splits to +/-1 evenly
+    c = jnp.array([[0.0, 0.0, 0.0]] * 3)
+    c = c.at[0].set(jnp.stack([y_h, 1 - y_h, jnp.zeros(())]))
+    c = c.at[1].set(jnp.stack([(1 - y_m) / 2, y_m, (1 - y_m) / 2]))
+    c = c.at[2].set(jnp.stack([jnp.zeros(()), 1 - y_l, y_l]))
+    return c
+
+
+def inject_trit_errors(trits: jax.Array, per_state_yield: jax.Array,
+                       key: jax.Array) -> jax.Array:
+    """Sample restore errors on a trit-plane tensor ((q, ...) int8)."""
+    conf = confusion_from_yields(jnp.asarray(per_state_yield, jnp.float32))
+    u = jax.random.uniform(key, trits.shape)
+    row = conf[(trits + 1).astype(jnp.int32)]          # (..., 3) probs
+    cdf = jnp.cumsum(row, axis=-1)
+    read_idx = jnp.sum(u[..., None] > cdf, axis=-1)    # 0..2
+    return (read_idx - 1).astype(jnp.int8)
+
+
+def inject_restore_errors(t: TernaryTensor, per_state_yield, key) -> TernaryTensor:
+    return TernaryTensor(inject_trit_errors(t.trits, per_state_yield, key), t.scale)
+
+
+def expected_trit_error_rate(per_state_yield, prior=(0.25, 0.5, 0.25)) -> float:
+    p = jnp.asarray(prior)
+    y = jnp.asarray(per_state_yield)
+    return float(jnp.dot(p, 1.0 - y))

@@ -1,0 +1,93 @@
+"""Dense trit packing — the TPU image of TL-ReRAM storage density.
+
+Two packed formats:
+
+* ``trit2``  — one trit per weight, 2-bit codes, 4 trits/byte.  This is the
+  single-trit ("pure ternary") mode: 8x denser than bf16.  Code map:
+  0 -> 0, 1 -> +1, 2 -> -1 (3 unused).
+* ``base3``  — the paper's 5-trit weights.  3^5 = 243 <= 256, so a whole
+  5-trit balanced number v in [-121,121] packs into ONE byte as v+121.
+  This is exactly why the paper pairs 5-trit coding with 8-bit systems
+  (Fig. 7b); decode is a single subtract.  2x denser than bf16 at ~8b
+  precision.
+
+Packing always runs along the FIRST axis of the trit/value array (the
+contraction axis K of a (K, N) weight), so the matmul kernel can unpack
+K-tiles straight in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ternary import from_balanced_ternary, to_balanced_ternary, trit_range
+
+TRIT2_PER_BYTE = 4
+_ENC = jnp.array([2, 0, 1], dtype=jnp.uint8)  # index by trit+1 -> code
+
+
+def pack_trits2(trits: jax.Array) -> jax.Array:
+    """(K, ...) int8 trits in {-1,0,1} -> (K//4, ...) uint8, little-endian
+    2-bit fields. K must be a multiple of 4 (pad upstream)."""
+    k = trits.shape[0]
+    if k % TRIT2_PER_BYTE:
+        raise ValueError(f"K={k} not a multiple of {TRIT2_PER_BYTE}")
+    codes = _ENC[(trits.astype(jnp.int32) + 1)]  # uint8 codes 0..2
+    g = codes.reshape((k // TRIT2_PER_BYTE, TRIT2_PER_BYTE) + trits.shape[1:])
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8).reshape(
+        (1, TRIT2_PER_BYTE) + (1,) * (trits.ndim - 1))
+    return jnp.sum(
+        (g.astype(jnp.uint8) << shifts).astype(jnp.uint8), axis=1, dtype=jnp.uint8
+    )
+
+
+def unpack_trits2(packed: jax.Array, k: int | None = None) -> jax.Array:
+    """Inverse of pack_trits2 -> (K, ...) int8 in {-1,0,1}."""
+    kp = packed.shape[0]
+    fields = []
+    for i in range(TRIT2_PER_BYTE):
+        c = (packed >> (2 * i)) & 0x3
+        fields.append(c)
+    codes = jnp.stack(fields, axis=1).reshape((kp * TRIT2_PER_BYTE,) + packed.shape[1:])
+    vals = (codes == 1).astype(jnp.int8) - (codes == 2).astype(jnp.int8)
+    return vals[:k] if k is not None else vals
+
+
+def pack_base3(values: jax.Array, num_trits: int = 5) -> jax.Array:
+    """Integer values in [-trit_range, trit_range] -> uint8 (value+offset).
+
+    Requires 3**num_trits <= 256 (num_trits <= 5)."""
+    if 3**num_trits > 256:
+        raise ValueError("base3 packing needs 3^q <= 256 (q <= 5)")
+    lim = trit_range(num_trits)
+    v = jnp.clip(values.astype(jnp.int32), -lim, lim)
+    return (v + lim).astype(jnp.uint8)
+
+
+def unpack_base3(packed: jax.Array, num_trits: int = 5) -> jax.Array:
+    """uint8 -> int32 values in [-121, 121]; decode = subtract offset."""
+    lim = trit_range(num_trits)
+    return packed.astype(jnp.int32) - lim
+
+
+def pack_trit_planes_base3(trits: jax.Array) -> jax.Array:
+    """(q, K, ...) trit planes -> (K, ...) uint8 base3-packed values."""
+    return pack_base3(from_balanced_ternary(trits), trits.shape[0])
+
+
+def unpack_base3_to_planes(packed: jax.Array, num_trits: int = 5) -> jax.Array:
+    """uint8 base3 -> (q, K, ...) trit planes (for the CIM-exact path)."""
+    return to_balanced_ternary(unpack_base3(packed, num_trits), num_trits)
+
+
+def packed_bytes(shape: tuple[int, ...], mode: str, num_trits: int = 5) -> int:
+    """HBM bytes for a weight of `shape` in the given packed mode."""
+    import math
+    n = math.prod(shape)
+    if mode == "trit2":
+        return n * num_trits // TRIT2_PER_BYTE  # 2 bits per trit
+    if mode == "base3":
+        return n  # one byte per (<=5)-trit weight
+    if mode == "bf16":
+        return 2 * n
+    raise ValueError(mode)

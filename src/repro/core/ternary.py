@@ -1,0 +1,144 @@
+"""Balanced-ternary codec and the paper's truncating quantization (Table 1/3).
+
+The paper stores each weight as ``q`` balanced-ternary trits (one trit per
+TL-ReRAM; -1/0/+1 <-> HRS/MRS/LRS) and encodes 8-bit inputs as 5 trits via
+the ternary input driver.  5 trits cover +/-(3^5-1)/2 = +/-121, slightly
+less than int8's +/-127, hence the paper's "quantize to 8-bit, then
+truncate to 5-trit" scheme (Table 3) which clips the rare |w|>121 values.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+TRITS_DEFAULT = 5
+
+
+def trit_range(num_trits: int) -> int:
+    """Max magnitude representable by `num_trits` balanced trits."""
+    return (3**num_trits - 1) // 2
+
+
+def to_balanced_ternary(x: jax.Array, num_trits: int = TRITS_DEFAULT) -> jax.Array:
+    """Integer array -> balanced-ternary trit planes.
+
+    Returns int8 array of shape (num_trits,) + x.shape with values in
+    {-1, 0, +1}; plane ``i`` holds the coefficient of 3**i (LSB first).
+    Values outside +/-trit_range are clipped first (the paper's truncation).
+    """
+    lim = trit_range(num_trits)
+    v = jnp.clip(x.astype(jnp.int32), -lim, lim)
+
+    def digit(v):
+        # balanced digit in {-1,0,1}: ((v mod 3) + 1) mod 3 - 1
+        d = jnp.mod(v, 3)  # jnp.mod is non-negative for positive divisor
+        d = jnp.where(d == 2, -1, d)
+        return d
+
+    planes = []
+    for _ in range(num_trits):
+        d = digit(v)
+        planes.append(d.astype(jnp.int8))
+        v = (v - d) // 3
+    return jnp.stack(planes, axis=0)
+
+
+def from_balanced_ternary(trits: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_balanced_ternary`. trits: (num_trits, ...)."""
+    num_trits = trits.shape[0]
+    weights = jnp.array([3**i for i in range(num_trits)], dtype=jnp.int32)
+    return jnp.tensordot(weights, trits.astype(jnp.int32), axes=([0], [0]))
+
+
+class QuantResult(NamedTuple):
+    values: jax.Array  # integer codes (int32)
+    scale: jax.Array   # per-tensor or per-axis float scale s.t. x ~= values*scale
+
+
+def quantize_symmetric(x: jax.Array, bound: int, axis=None) -> QuantResult:
+    """Symmetric linear quantization of float x to integers in [-bound, bound]."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / bound
+    q = jnp.clip(jnp.round(x / scale), -bound, bound).astype(jnp.int32)
+    return QuantResult(q, scale)
+
+
+def quantize_8b(x: jax.Array, axis=None) -> QuantResult:
+    """BC(8b): int8 symmetric quantization (paper's binary-coding baseline)."""
+    return quantize_symmetric(x, 127, axis=axis)
+
+
+def quantize_5t_direct(x: jax.Array, num_trits: int = TRITS_DEFAULT, axis=None) -> QuantResult:
+    """TC(5t) direct: scale straight into the +/-121 trit range (Table 3 row 3)."""
+    return quantize_symmetric(x, trit_range(num_trits), axis=axis)
+
+
+def quantize_8b_truncate_5t(x: jax.Array, num_trits: int = TRITS_DEFAULT, axis=None) -> QuantResult:
+    """The paper's method (Table 3 row 4): quantize to 8-bit, then truncate
+    (clip) the int8 codes into the 5-trit range.  Because NN weights are
+    sparse/small, clipping 122..127 -> 121 is nearly lossless."""
+    q8 = quantize_8b(x, axis=axis)
+    lim = trit_range(num_trits)
+    return QuantResult(jnp.clip(q8.values, -lim, lim), q8.scale)
+
+
+class TernaryTensor(NamedTuple):
+    """A tensor quantized to balanced-ternary trit planes."""
+    trits: jax.Array   # int8 (num_trits,) + shape, values in {-1,0,1}
+    scale: jax.Array   # float scale
+
+    @property
+    def num_trits(self) -> int:
+        return self.trits.shape[0]
+
+    def dequantize(self) -> jax.Array:
+        return from_balanced_ternary(self.trits).astype(jnp.float32) * self.scale
+
+
+def ternarize(x: jax.Array, num_trits: int = TRITS_DEFAULT, axis=None,
+              method: str = "truncate") -> TernaryTensor:
+    """Float tensor -> TernaryTensor using the paper's flow.
+
+    method: 'truncate' (8b then clip; the paper's choice) or 'direct'.
+    """
+    if method == "truncate":
+        q = quantize_8b_truncate_5t(x, num_trits, axis=axis)
+    elif method == "direct":
+        q = quantize_5t_direct(x, num_trits, axis=axis)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return TernaryTensor(to_balanced_ternary(q.values, num_trits), q.scale)
+
+
+def encode_inputs(x: jax.Array, num_trits: int = TRITS_DEFAULT, axis=None) -> TernaryTensor:
+    """Ternary input driver: float activations -> 5-trit codes (shared by
+    16 rows in the macro; here a pure function)."""
+    q = quantize_8b_truncate_5t(x, num_trits, axis=axis)
+    return TernaryTensor(to_balanced_ternary(q.values, num_trits), q.scale)
+
+
+# --- Table 1 signal encodings (used by the macro model & its tests) -----
+
+#   input trit  +1 -> IN1/IN2 = 1/1, 0 -> 1/0, -1 -> 0/0   (INB = complement)
+#   weight trit +1 -> Q1Q2 = 00 (LRS), 0 -> 10 (MRS), -1 -> 11 (HRS)
+
+def input_signals(trit: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """trit in {-1,0,1} -> (IN1, IN2) per Table 1."""
+    in1 = (trit >= 0).astype(jnp.int8)
+    in2 = (trit > 0).astype(jnp.int8)
+    return in1, in2
+
+
+def weight_signals(trit: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """trit in {-1,0,1} -> (Q1, Q2) per Table 1 (00=+1, 10=0, 11=-1)."""
+    q1 = (trit <= 0).astype(jnp.int8)
+    q2 = (trit < 0).astype(jnp.int8)
+    return q1, q2
+
+
+def signals_to_weight_trit(q1: jax.Array, q2: jax.Array) -> jax.Array:
+    """(Q1,Q2) -> trit; inverse of weight_signals."""
+    return (1 - q1.astype(jnp.int8) - q2.astype(jnp.int8)).astype(jnp.int8)

@@ -1,0 +1,114 @@
+"""Monte-Carlo restore-yield model — reproduces Fig. 6 (and the SL contrast).
+
+Yield := P(trit restored to the SRAM pair equals the trit stored in the
+TL-ReRAM), under (i) lognormal ReRAM resistance variation (filament gap
+3σ/μ = 10 %), (ii) reference-ladder variation, (iii) CMOS discharge-path
+mismatch, (iv) comparator offset, and (v) leakage through the n-1
+unselected insulating selectors (grows with cluster size n) plus m-1 off
+clusters.  All draws are vectorized with jax.random — the "1000
+Monte-Carlo SPICE runs" of §3.4 become a single vmapped batch.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import device_models as dm
+from .cim import HRS, LRS, MRS, restore_levels_to_trits, store_trits_to_levels
+
+STATE_TRITS = jnp.array([-1, 0, 1], dtype=jnp.int8)          # HRS, MRS, LRS
+# weights in NNs are sparse -> MRS-heavy prior (§3.4 "MRS tuned as preference")
+SPARSE_PRIOR = jnp.array([0.25, 0.50, 0.25])
+
+
+@partial(jax.jit, static_argnames=("n", "m", "num_mc", "d"))
+def tl_restore_trials(key: jax.Array, n: int, m: int, num_mc: int,
+                      d: dm.DeviceParams = dm.DeviceParams()) -> jax.Array:
+    """(3, num_mc) bool — per-state restore success for TL-nvSRAM-CIM."""
+    levels = store_trits_to_levels(STATE_TRITS)               # (3,)
+    keys = jax.random.split(key, 5)
+    r = dm.sample_resistance(levels[:, None], keys[0], d, (3, num_mc))
+    cmos = d.cmos_sigma_rel * jax.random.normal(keys[1], (3, num_mc))
+    g_cell = dm.discharge_conductance(r, d, cmos)
+    # leakage: unselected selectors' insulating resistance also varies
+    z = jax.random.normal(keys[2], (3, num_mc))
+    g_leak = dm.leakage_conductance(n, m, d) * jnp.exp(0.1 * z)
+    g_ref = dm.sample_reference_conductances(keys[3], d, (3, num_mc))
+    cmp1 = d.comparator_sigma_siemens * jax.random.normal(keys[4], (3, num_mc))
+    cmp2 = d.comparator_sigma_siemens * jax.random.normal(
+        jax.random.fold_in(keys[4], 1), (3, num_mc))
+    # restore_levels_to_trits recomputes the series conductance from
+    # `resistances`; CMOS mismatch is folded in as an equivalent
+    # conductance offset added to the leakage term.
+    g_eff_offset = g_cell - dm.discharge_conductance(r, d)     # cmos part
+    got = restore_levels_to_trits(levels[:, None], resistances=r,
+                                  g_leak=g_leak + g_eff_offset,
+                                  g_ref=g_ref, cmp_noise=(cmp1, cmp2), device=d)
+    want = STATE_TRITS[:, None]
+    return got == want
+
+
+def tl_restore_yield(key: jax.Array, n: int, m: int = 4, num_mc: int = 4096,
+                     d: dm.DeviceParams = dm.DeviceParams(),
+                     prior: jax.Array = SPARSE_PRIOR) -> dict:
+    ok = tl_restore_trials(key, n, m, num_mc, d)
+    per_state = ok.mean(axis=1)
+    return {
+        "per_state": per_state,                  # [HRS(-1), MRS(0), LRS(+1)]
+        "weighted": float(jnp.dot(prior, per_state)),
+        "min_state": float(per_state.min()),
+    }
+
+
+@partial(jax.jit, static_argnames=("n", "num_mc", "d"))
+def sl_restore_trials(key: jax.Array, n: int, num_mc: int,
+                      d: dm.DeviceParams = dm.DeviceParams()) -> jax.Array:
+    """(2, num_mc) bool — HRS/LRS restore success for the voltage-divider
+    select scheme of SL-nvSRAM-CIM [12].  The unselected SL-ReRAMs hold
+    random binary data; their combined parallel resistance moves the
+    divider output, squeezing the margin as n grows."""
+    keys = jax.random.split(key, 4)
+    states = jnp.array([d.r_hrs, d.r_lrs])                     # selected
+    r_sel = states[:, None] * jnp.exp(
+        d.sigma_ln_r * jax.random.normal(keys[0], (2, num_mc)))
+    bits = jax.random.bernoulli(keys[1], 0.5, (2, num_mc, max(n - 1, 1)))
+    r_un_nom = jnp.where(bits, d.r_lrs, d.r_hrs)
+    r_un = r_un_nom * jnp.exp(
+        d.sigma_ln_r * jax.random.normal(keys[2], (2, num_mc, max(n - 1, 1))))
+    vx = dm.sl_divider_voltage(r_sel, r_un, d.vdd)
+    vth = dm.sl_nominal_threshold(n, d, d.vdd)      # trip fixed at n_design=6
+    trip_noise = 0.025 * jax.random.normal(keys[3], (2, num_mc))  # 25 mV σ Vth
+    vx = vx + trip_noise
+    # HRS -> divider output HIGH (R_sel large -> small V across R_par?) --
+    # V_X = V·R_par/(R_sel+R_par): HRS gives LOW V_X, LRS gives HIGH V_X.
+    got_hrs_ok = vx[0] < vth
+    got_lrs_ok = vx[1] > vth
+    return jnp.stack([got_hrs_ok, got_lrs_ok])
+
+
+def sl_restore_yield(key: jax.Array, n: int, num_mc: int = 4096,
+                     d: dm.DeviceParams = dm.DeviceParams()) -> dict:
+    ok = sl_restore_trials(key, n, num_mc, d)
+    per_state = ok.mean(axis=1)
+    return {"per_state": per_state, "weighted": float(per_state.mean()),
+            "min_state": float(per_state.min())}
+
+
+def yield_sweep(key: jax.Array, ns=(6, 12, 18, 30, 45, 60), m: int = 4,
+                num_mc: int = 4096, scheme: str = "tl") -> dict:
+    """Fig. 6(a): yield vs number of ReRAMs per cluster/group."""
+    out = {}
+    for i, n in enumerate(ns):
+        k = jax.random.fold_in(key, i)
+        out[n] = (tl_restore_yield(k, n, m, num_mc) if scheme == "tl"
+                  else sl_restore_yield(k, n, num_mc))
+    return out
+
+
+def cluster_sweep(key: jax.Array, ms=(1, 2, 3, 4), n: int = 60,
+                  num_mc: int = 4096) -> dict:
+    """Fig. 6(b): yield vs number of clusters m (TL scheme)."""
+    return {m: tl_restore_yield(jax.random.fold_in(key, m), n, m, num_mc)
+            for m in ms}

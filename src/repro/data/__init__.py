@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, lm_batch, batch_for, class_batch,
+                       ClassTaskConfig, entropy_floor)  # noqa: F401

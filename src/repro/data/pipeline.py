@@ -1,0 +1,131 @@
+"""Deterministic, shardable synthetic data pipeline.
+
+Design requirements (DESIGN.md §3):
+  * stateless — ``batch = f(config, step)``; restart/skip-ahead after a
+    failure is exact (the checkpoint only stores the step number);
+  * shardable — every host materializes only its row slice of the global
+    batch, selected by (host_index, num_hosts); rows are generated
+    independently so any partitioning yields identical global data;
+  * learnable — tokens follow a fixed affine chain t_{i+1} = (a·t_i + b)
+    mod V with random restarts and replacement noise, so next-token loss
+    has a known entropy floor and a model that learns the chain drops
+    well below log(V).  This stands in for real text offline.
+
+The classification task mirrors the paper's CIFAR-10 experiments
+(Table 3 / Fig. 10): class-conditional Gaussians pushed through a fixed
+random rotation — linearly separable at high SNR, so quantization /
+restore-error damage shows up as clean accuracy deltas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# chain coefficients: any a coprime with V works; fixed across the run
+_A, _B = 31, 17
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    restart_p: float = 0.02        # chain resets (irreducible entropy)
+    noise_p: float = 0.02          # token replacement noise
+    chain_vocab: int = 0           # 0 -> min(vocab, 4096)
+
+    @property
+    def v(self) -> int:
+        return self.chain_vocab or min(self.vocab_size, 4096)
+
+
+def entropy_floor(cfg: DataConfig) -> float:
+    """Lower bound on achievable mean NLL (nats/token) for the chain task."""
+    v = cfg.v
+    p_det = (1 - cfg.restart_p) * (1 - cfg.noise_p)
+    p_rand = 1 - p_det
+    # deterministic next token w.p. p_det, uniform otherwise
+    h = -(p_det + p_rand / v) * math.log(p_det + p_rand / v)
+    h -= p_rand * (v - 1) / v * math.log(p_rand / v)
+    return h
+
+
+def _row(key: jax.Array, cfg: DataConfig) -> jax.Array:
+    """One (seq_len + 1,) token row — chain with restarts + noise."""
+    v = cfg.v
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    n = cfg.seq_len + 1
+    restart = jax.random.bernoulli(k0, cfg.restart_p, (n,))
+    restart_tok = jax.random.randint(k1, (n,), 0, v)
+    noise = jax.random.bernoulli(k2, cfg.noise_p, (n,))
+    noise_tok = jax.random.randint(k3, (n,), 0, v)
+
+    def step(t, inp):
+        rs, rt = inp
+        nxt = jnp.where(rs, rt, (_A * t + _B) % v)
+        return nxt, nxt
+
+    t0 = restart_tok[0]
+    _, chain = jax.lax.scan(step, t0, (restart[1:], restart_tok[1:]))
+    chain = jnp.concatenate([t0[None], chain])
+    return jnp.where(noise, noise_tok, chain).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("cfg", "host_index", "num_hosts"))
+def lm_batch(cfg: DataConfig, step: jax.Array, host_index: int = 0,
+             num_hosts: int = 1) -> dict:
+    """{tokens, labels}: this host's (B_local, S) slice of global step data."""
+    b_local = cfg.global_batch // num_hosts
+    rows = host_index * b_local + jnp.arange(b_local)
+    base = jax.random.key(cfg.seed)
+    keys = jax.vmap(
+        lambda r: jax.random.fold_in(jax.random.fold_in(base, step), r))(rows)
+    toks = jax.vmap(lambda k: _row(k, cfg))(keys)       # (B, S+1)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def batch_for(model_cfg, cfg: DataConfig, step, host_index: int = 0,
+              num_hosts: int = 1) -> dict:
+    """Arch-aware batch: adds the stubbed modality frontend inputs
+    (precomputed frame/patch embeddings) for audio/vlm families."""
+    batch = lm_batch(cfg, step, host_index, num_hosts)
+    if model_cfg.family in ("audio", "vlm"):
+        b = batch["tokens"].shape[0]
+        key = jax.random.fold_in(jax.random.key(cfg.seed + 7), step)
+        feats = jax.random.normal(
+            key, (b, model_cfg.encoder_seq, model_cfg.d_model), jnp.bfloat16)
+        batch["frames" if model_cfg.family == "audio" else "patches"] = feats
+    return batch
+
+
+# ----------------------------------------------------------------------
+# classification task (the paper's accuracy substrate, CIFAR-10 stand-in)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClassTaskConfig:
+    num_classes: int = 10
+    dim: int = 128
+    snr: float = 2.0               # class-mean norm / noise std
+    seed: int = 0
+
+
+def class_means(cfg: ClassTaskConfig) -> jax.Array:
+    k = jax.random.key(cfg.seed + 101)
+    mu = jax.random.normal(k, (cfg.num_classes, cfg.dim))
+    return cfg.snr * mu / jnp.linalg.norm(mu, axis=1, keepdims=True)
+
+
+@partial(jax.jit, static_argnames=("cfg", "batch"))
+def class_batch(cfg: ClassTaskConfig, step: jax.Array, batch: int = 256) -> dict:
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    ky, kx = jax.random.split(key)
+    y = jax.random.randint(ky, (batch,), 0, cfg.num_classes)
+    x = class_means(cfg)[y] + jax.random.normal(kx, (batch, cfg.dim))
+    return {"x": x.astype(jnp.float32), "y": y}

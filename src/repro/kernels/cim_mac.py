@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: macro-exact ternary CIM MAC with per-row-group ADC.
+
+Bit-exact image of the TL-nvSRAM-CIM array (core/cim.py is the jnp
+oracle): K is consumed in 16-row groups; each group's integer partial sum
+per (input-trit i, weight-trit j) plane pair is pushed through the 5-bit
+ADC transfer (count-domain clip -> MAC clip to [rows-2^b+1, rows]) before
+the shift-&-add combines planes with powers of 3.
+
+Zero-padding K to a multiple of 16 is exact: a partial group of r < 16
+real rows yields |MAC| <= r <= 15, inside the clip window [-15, 16], so
+the ADC never saturates on padded groups (see tests/test_kernels.py).
+
+Grid: (M/bm, N/bn, K/bk); bk is a multiple of ROWS_PER_GROUP; the trit
+planes ride inside the block (qi, bm, bk) / (qw, bk, bn) and the i/j/group
+loops are unrolled in the kernel body (qi, qw <= 5, groups = bk/16).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS_PER_GROUP = 16
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, adc_bits: int, nk: int,
+            qi: int, qw: int, groups: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo = ROWS_PER_GROUP - 2**adc_bits + 1   # -15 for the 5-bit ADC
+    hi = ROWS_PER_GROUP                     # +16
+    acc = acc_ref[...]
+    for i in range(qi):
+        for j in range(qw):
+            w3 = 3 ** (i + j)
+            for g in range(groups):
+                s = slice(g * ROWS_PER_GROUP, (g + 1) * ROWS_PER_GROUP)
+                xg = x_ref[i, :, s].astype(jnp.float32)   # (bm, 16)
+                wg = w_ref[j, s, :].astype(jnp.float32)   # (16, bn)
+                # per-group MAC is exact in f32 (|mac| <= 16); the shifted
+                # accumulation must be int32 (3^8 * 16 * groups > 2^24).
+                mac = jax.lax.dot(xg, wg, preferred_element_type=jnp.float32)
+                acc += w3 * jnp.clip(mac, lo, hi).astype(jnp.int32)
+    acc_ref[...] = acc
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "bm", "bn", "bk",
+                                             "interpret"))
+def cim_mac(x_trits: jax.Array, w_trits: jax.Array, *, adc_bits: int = 5,
+            bm: int = 128, bn: int = 128, bk: int = 128,
+            interpret: bool = False) -> jax.Array:
+    """(qi, M, K) int8 x (qw, K, N) int8 -> (M, N) int32 CIM MAC.
+
+    Matches core.cim.cim_matmul_int (same ADC semantics) while tiling for
+    the MXU; the 16-wide group dots underutilize the MXU by design — this
+    kernel's job is bit-exact accuracy evaluation at speed, not peak FLOPs
+    (use ternary_matmul for the production fast path)."""
+    assert bk % ROWS_PER_GROUP == 0
+    qi, m, kdim = x_trits.shape
+    qw, k2, n = w_trits.shape
+    assert kdim == k2
+    mp, np_, kp = (-m % bm), (-n % bn), (-kdim % bk)
+    if mp or kp:
+        x_trits = jnp.pad(x_trits, ((0, 0), (0, mp), (0, kp)))
+    if np_ or kp:
+        w_trits = jnp.pad(w_trits, ((0, 0), (0, kp), (0, np_)))
+    mt, nt, kt = x_trits.shape[1] // bm, w_trits.shape[2] // bn, x_trits.shape[2] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, adc_bits=adc_bits, nk=kt, qi=qi, qw=qw,
+                          groups=bk // ROWS_PER_GROUP),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((qi, bm, bk), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((qw, bk, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x_trits.shape[1], w_trits.shape[2]),
+                                       jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_trits, w_trits)
+    return out[:m, :n]

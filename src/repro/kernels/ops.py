@@ -1,0 +1,178 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (the validation environment) and
+False on TPU.  All wrappers accept/return standard JAX arrays and handle
+quantization & packing, so model code can treat them as drop-in matmuls.
+
+PackedTernary is a registered pytree (data/scale are children, the
+packing mode is static aux), so packed weights flow through jit, scan
+slicing (models scan over a leading layer axis) and the dry-run's
+ShapeDtypeStruct lowering.
+
+Two execution backends implement the same contract:
+  pallas — kernels/ternary_matmul.py (VMEM dequant-on-load); the real
+           TPU path, validated on CPU in interpret mode.
+  xla    — fused jnp dequant + dot.  Used by the dry-run (Pallas TPU
+           kernels cannot lower on the CPU host platform) so the packed
+           uint8 weight reads show up faithfully in the memory-roofline
+           term.  tests/test_kernels.py asserts pallas == xla == oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_trit_planes_base3, pack_trits2
+from repro.core.ternary import encode_inputs, ternarize, trit_range
+from . import cim_mac as _cim_mac_kernel
+from . import ternary_matmul as _tm_kernel
+
+TRIT2_PER_BYTE = 4
+BASE3_OFFSET = trit_range(5)        # 121
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedTernary:
+    """A weight matrix packed for the ternary_matmul kernel.
+
+    data : uint8 (..., K, N) [base3] or (..., K/4, N) [trit2]
+    scale: f32  (..., N) — per-output-column
+    mode : 'base3' | 'trit2' (static)
+    """
+
+    def __init__(self, data, scale, mode: str = "base3"):
+        self.data = data
+        self.scale = scale
+        self.mode = mode
+
+    @property
+    def kdim(self) -> int:
+        k = self.data.shape[-2]
+        return k * TRIT2_PER_BYTE if self.mode == "trit2" else k
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def shape(self) -> tuple:
+        return self.data.shape[:-2] + (self.kdim, self.data.shape[-1])
+
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.mode,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    def __repr__(self):
+        return (f"PackedTernary(mode={self.mode!r}, "
+                f"data={getattr(self.data, 'shape', None)}, "
+                f"scale={getattr(self.scale, 'shape', None)})")
+
+
+def pack_weights(w: jax.Array, mode: str = "base3",
+                 num_trits: int = 5) -> PackedTernary:
+    """Quantize a float (..., K, N) weight with the paper's truncating flow
+    and pack for HBM-dense storage (per-output-column scales).  A leading
+    stack axis (scan-over-layers weights) is supported."""
+    if mode == "base3":
+        tt = ternarize(w, num_trits, axis=-2, method="truncate")
+        data = pack_trit_planes_base3(tt.trits)          # (..., K, N) uint8
+        scale = jnp.squeeze(tt.scale, axis=-2)           # (..., N)
+    elif mode == "trit2":
+        # single-trit weights: w ~ scale * t, t in {-1,0,1}; threshold at
+        # 0.75 * mean|w| per column (standard TWN choice).
+        absw = jnp.abs(w)
+        thr = 0.75 * jnp.mean(absw, axis=-2, keepdims=True)
+        t = jnp.sign(w) * (absw > thr)
+        nonzero = jnp.maximum(jnp.sum(jnp.abs(t), axis=-2), 1.0)
+        scale = jnp.sum(absw * jnp.abs(t), axis=-2) / nonzero   # (..., N)
+        k = w.shape[-2]
+        kpad = -k % TRIT2_PER_BYTE
+        if kpad:
+            pad = [(0, 0)] * w.ndim
+            pad[-2] = (0, kpad)
+            t = jnp.pad(t, pad)
+        tk = jnp.moveaxis(t.astype(jnp.int8), -2, 0)     # (K, ..., N)
+        data = jnp.moveaxis(pack_trits2(tk), 0, -2)      # (..., K/4, N)
+    else:
+        raise ValueError(mode)
+    return PackedTernary(data, scale.astype(jnp.float32), mode)
+
+
+# ------------------------------------------------------------------ xla path
+
+def _dequant_xla(w: PackedTernary, dtype=jnp.float32) -> jax.Array:
+    """Fused-by-XLA dequantization of a packed weight (any leading dims)."""
+    if w.mode == "base3":
+        dec = w.data.astype(jnp.float32) - float(BASE3_OFFSET)
+    else:
+        p = w.data
+        fields = [(p >> (2 * i)) & 0x3 for i in range(TRIT2_PER_BYTE)]
+        codes = jnp.stack(fields, axis=-2)               # (..., K/4, 4, N)
+        dec = ((codes == 1).astype(jnp.float32)
+               - (codes == 2).astype(jnp.float32))
+        dec = dec.reshape(p.shape[:-2] +
+                          (p.shape[-2] * TRIT2_PER_BYTE, p.shape[-1]))
+    return (dec * w.scale.astype(jnp.float32)[..., None, :]).astype(dtype)
+
+
+def ternary_matmul_xla(x: jax.Array, w: PackedTernary) -> jax.Array:
+    """x (..., K) @ packed w -> (..., N) f32 via fused jnp dequant."""
+    wd = _dequant_xla(w)[: x.shape[-1]]        # trit2 K-padding decodes to 0
+    return jnp.matmul(x.astype(jnp.float32), wd,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------- dispatch
+
+def ternary_matmul(x: jax.Array, w: PackedTernary, *, interpret=None,
+                   backend: str = "auto", **block_kw) -> jax.Array:
+    """x (..., K) @ packed w (K, N) -> (..., N) fp32."""
+    if backend == "xla":
+        return ternary_matmul_xla(x, w)
+    if interpret is None:
+        interpret = _default_interpret()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if w.mode == "trit2" and x.shape[-1] % TRIT2_PER_BYTE:
+        x2 = jnp.pad(x2, ((0, 0), (0, -x.shape[-1] % TRIT2_PER_BYTE)))
+    y = _tm_kernel.ternary_matmul(x2, w.data, w.scale, mode=w.mode,
+                                  interpret=interpret, **block_kw)
+    return y.reshape(*lead, w.data.shape[-1])
+
+
+def cim_matmul(x: jax.Array, w: "PackedTernary | jax.Array", *,
+               adc_bits: int = 5, num_trits: int = 5, interpret=None,
+               **block_kw) -> jax.Array:
+    """Macro-exact CIM matmul: float x (..., K) x weight (K, N) -> (..., N).
+
+    Accepts a float weight (ternarized on the fly) or a base3 PackedTernary.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xt = encode_inputs(x2, num_trits)
+    if isinstance(w, PackedTernary):
+        if w.mode != "base3":
+            raise ValueError("cim_matmul needs base3 (multi-trit) weights")
+        from repro.core.packing import unpack_base3_to_planes
+        w_trits = unpack_base3_to_planes(w.data, num_trits)
+        w_scale = w.scale
+    else:
+        # per-tensor scale: exactly mirrors core.cim.cim_matmul
+        tt = ternarize(w, num_trits)
+        w_trits, w_scale = tt.trits, tt.scale
+    y_int = _cim_mac_kernel.cim_mac(xt.trits, w_trits, adc_bits=adc_bits,
+                                    interpret=interpret, **block_kw)
+    y = y_int.astype(jnp.float32) * xt.scale * w_scale
+    return y.reshape(*lead, w_trits.shape[-1])

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cim as cim_core
+from repro.core.packing import unpack_base3, unpack_trits2
+
+
+def ternary_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                       mode: str = "base3") -> jax.Array:
+    """Oracle for kernels.ternary_matmul: unpack-then-matmul in fp32."""
+    if mode == "base3":
+        w = unpack_base3(w_packed).astype(jnp.float32)
+    elif mode == "trit2":
+        w = unpack_trits2(w_packed).astype(jnp.float32)
+    else:
+        raise ValueError(mode)
+    y = x.astype(jnp.float32) @ w
+    return y * jnp.asarray(scale, jnp.float32)
+
+
+def cim_mac_ref(x_trits: jax.Array, w_trits: jax.Array,
+                adc_bits: int = 5) -> jax.Array:
+    """Oracle for kernels.cim_mac: the core functional macro model.
+
+    core.cim.cim_matmul_int operates on (q, B, K) x (q, K, N); the kernel
+    uses (q, M, K) x (q, K, N) — same layout, direct call."""
+    cfg = cim_core.MacroConfig(adc_bits=adc_bits)
+    return cim_core.cim_matmul_int(x_trits, w_trits, cfg)

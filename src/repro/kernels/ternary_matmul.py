@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: packed-ternary weight matmul with VMEM dequant-on-load.
+
+The TPU image of the paper's density + DC-free-restore mechanism
+(DESIGN.md §2): weights live in HBM in a packed ternary format, are
+unpacked *inside* the kernel's VMEM tiles (the "restore"), and feed the
+MXU in bf16/f32.  No dequantized copy of the weights ever exists in HBM.
+
+Packing modes
+  base3  — one uint8 per 5-trit weight (value+121; decode = subtract).
+           Paper-faithful precision (Table 3), 2x denser than bf16.
+  trit2  — four 1-trit weights per uint8 (2-bit fields).  Pure-ternary
+           mode, 8x denser than bf16; the memory-roofline option for
+           weight-bound decode shapes.
+
+Grid: (M/bm, N/bn, K/bk), K innermost for in-place accumulation.
+BlockSpecs keep x:(bm,bk), w:(bk|bk/4, bn), out:(bm,bn) in VMEM; bm/bn/bk
+default to MXU-aligned 128 multiples.  Per-output-column scales are
+applied once on the final K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TRIT2_PER_BYTE = 4
+BASE3_OFFSET = 121  # trit_range(5)
+
+
+def _decode_base3(w_packed: jax.Array) -> jax.Array:
+    """uint8 (bk, bn) -> f32 in [-121, 121]: a single subtract."""
+    return w_packed.astype(jnp.float32) - float(BASE3_OFFSET)
+
+
+def _decode_trit2(w_packed: jax.Array) -> jax.Array:
+    """uint8 (bk/4, bn) -> f32 (bk, bn) in {-1, 0, +1}."""
+    kp, bn = w_packed.shape
+    fields = [(w_packed >> (2 * i)) & 0x3 for i in range(TRIT2_PER_BYTE)]
+    codes = jnp.stack(fields, axis=1)                    # (bk/4, 4, bn)
+    vals = (codes == 1).astype(jnp.float32) - (codes == 2).astype(jnp.float32)
+    return vals.reshape(kp * TRIT2_PER_BYTE, bn)
+
+
+def _kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, mode: str, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    decode = _decode_base3 if mode == "base3" else _decode_trit2
+    w = decode(w_ref[...])                               # (bk, bn) f32
+    x = x_ref[...].astype(jnp.float32)                   # (bm, bk)
+    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] * scale_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk",
+                                             "interpret", "out_dtype"))
+def ternary_matmul(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                   *, mode: str = "base3", bm: int = 128, bn: int = 128,
+                   bk: int = 512, interpret: bool = False,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """y[m,n] = sum_k x[m,k] * decode(w_packed)[k,n] * scale[n].
+
+    x: (M, K) float; w_packed: (K, N) uint8 [base3] or (K/4, N) uint8
+    [trit2]; scale: (N,) float (per-column) or scalar broadcastable.
+    """
+    m, kdim = x.shape
+    if mode == "base3":
+        kw, n = w_packed.shape
+        assert kw == kdim, (kw, kdim)
+    elif mode == "trit2":
+        kw, n = w_packed.shape
+        assert kw * TRIT2_PER_BYTE == kdim, (kw, kdim)
+    else:
+        raise ValueError(mode)
+    scale = jnp.broadcast_to(jnp.asarray(scale, x.dtype).reshape(-1), (n,))
+
+    # pad to block multiples
+    mp, np_, kp = (-m % bm), (-n % bn), (-kdim % bk)
+    if mp or kp:
+        x = jnp.pad(x, ((0, mp), (0, kp)))
+    if np_ or kp:
+        kw_pad = kp if mode == "base3" else kp // TRIT2_PER_BYTE
+        pad_val = BASE3_OFFSET if mode == "base3" else 0  # decode -> 0
+        w_packed = jnp.pad(w_packed, ((0, kw_pad), (0, np_)),
+                           constant_values=pad_val)
+    if np_:
+        scale = jnp.pad(scale, (0, np_))
+    mt, nt, kt = x.shape[0] // bm, w_packed.shape[1] // bn, x.shape[1] // bk
+    bkw = bk if mode == "base3" else bk // TRIT2_PER_BYTE
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, mode=mode, nk=kt),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkw, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], w_packed.shape[1]), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, scale)
+    return out[:m, :n]

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded
+dispatch/combine einsums (GShard style).
+
+Tokens are routed in fixed-size GROUPS (default 1024): capacity is
+per-group (C = g*k*cf/E), so dispatch tensors stay O(T * g * k * cf)
+globally instead of O(T^2) — the standard GShard trick that keeps MoE
+memory linear in tokens.  The group axis shards over 'data' (+'pod') and
+the expert axis over 'model' (EP); XLA inserts the dispatch/combine
+all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ParamDef
+
+MOE_GROUP = 1024
+
+
+def moe_defs(cfg: ModelConfig, layers: int) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    L = (layers,)
+    return {
+        "router": ParamDef(L + (d, e), ("layers", "embed", "none"),
+                           dtype=jnp.float32),
+        "w1": ParamDef(L + (e, d, f), ("layers", "expert", "embed", "mlp")),
+        "w3": ParamDef(L + (e, d, f), ("layers", "expert", "embed", "mlp")),
+        "w2": ParamDef(L + (e, f, d), ("layers", "expert", "mlp", "embed")),
+    }
+
+
+def moe_block(x: jax.Array, w, cfg: ModelConfig, cim_cfg=None,
+              group_size: int = MOE_GROUP):
+    """x (B,S,D) -> (y, aux_loss). Per-group capacity; overflow dropped."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    g = min(group_size, t)
+    pad = -t % g
+    xt = x.reshape(t, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    ng = xt.shape[0] // g
+    xg = xt.reshape(ng, g, d)                                    # (G,g,D)
+
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32),
+                        w["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G,g,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                # (G,g,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = max(1, int(g * k * cfg.moe_capacity_factor / e))
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)        # (G,g,k,E)
+    # capacity slot of each (token, choice) within its expert, per group:
+    flat = onehot.reshape(ng, g * k, e)
+    pos = (jnp.cumsum(flat, axis=1) * flat - 1).reshape(ng, g, k, e)
+    within = (pos >= 0) & (pos < cap)
+
+    dispatch = jnp.zeros((ng, g, e, cap), x.dtype)
+    combine = jnp.zeros((ng, g, e, cap), x.dtype)
+    for i in range(k):                                           # k <= 8
+        sel = (onehot[:, :, i] * within[:, :, i]).astype(x.dtype)  # (G,g,E)
+        oh_cap = jax.nn.one_hot(jnp.clip(pos[:, :, i], 0, cap - 1), cap,
+                                dtype=x.dtype)                   # (G,g,E,C)
+        d_i = oh_cap * sel[..., None]
+        dispatch = dispatch + d_i
+        combine = combine + d_i * gate_vals[:, :, i, None, None].astype(x.dtype)
+
+    def expert_w(name):
+        """Expert weights may be PackedTernary (paper 5-trit storage);
+        dequant is elementwise and fuses into the einsum operand, so the
+        HBM read stays at the packed width."""
+        from repro.kernels.ops import PackedTernary, _dequant_xla
+        ww = w[name]
+        if isinstance(ww, PackedTernary):
+            return _dequant_xla(ww, x.dtype)
+        return ww
+
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xg)              # (G,E,C,D)
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", xe, expert_w("w1"))) * \
+        jnp.einsum("necd,edf->necf", xe, expert_w("w3"))
+    ye = jnp.einsum("necf,efd->necd", h, expert_w("w2"))         # (G,E,C,D)
+    y = jnp.einsum("ngec,necd->ngd", combine, ye)
+    y = y.reshape(t + pad, d)[:t].reshape(b, s, d)
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    me = probs.mean(axis=(0, 1))                                 # (E,)
+    ce = onehot.sum(axis=2).astype(jnp.float32).mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * 1e-2
+    return y, aux

@@ -1,0 +1,424 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (sLSTM+mLSTM).
+
+Mamba2 uses the chunked SSD algorithm: intra-chunk quadratic einsums with
+log-domain decay masks + an inter-chunk lax.scan over states — O(S·c)
+compute, O(heads·hd·state) decode state (why zamba2/xlstm run long_500k).
+mLSTM uses the stabilized parallel form for train/prefill and the
+recurrent matrix-memory form for decode.  sLSTM is inherently sequential
+(lax.scan over time).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ParamDef
+from .layers import dense, rms_norm
+
+CHUNK = 256
+
+
+# ===================================================================
+# Mamba2
+# ===================================================================
+
+class Mamba2State(NamedTuple):
+    h: jax.Array           # (B, heads, hd, state)
+    conv: jax.Array        # (B, conv_width-1, conv_dim)
+    index: jax.Array
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    heads = d_inner // 64
+    hd = 64
+    state = cfg.ssm_state or 64
+    groups = 1                      # B/C shared across heads (n_groups=1)
+    conv_dim = d_inner + 2 * groups * state
+    return d_inner, heads, hd, state, groups, conv_dim
+
+
+def mamba2_defs(cfg: ModelConfig, layers: int) -> dict:
+    d = cfg.d_model
+    d_inner, heads, hd, state, groups, conv_dim = mamba2_dims(cfg)
+    L = (layers,)
+    in_dim = 2 * d_inner + 2 * groups * state + heads   # z, x, B, C, dt
+    return {
+        "in_proj": ParamDef(L + (d, in_dim), ("layers", "embed", "inner")),
+        "conv_w": ParamDef(L + (4, conv_dim), ("layers", "none", "inner"), "normal"),
+        "conv_b": ParamDef(L + (conv_dim,), ("layers", "inner"), "zeros"),
+        "a_log": ParamDef(L + (heads,), ("layers", "none"), "zeros"),
+        "dt_bias": ParamDef(L + (heads,), ("layers", "none"), "zeros"),
+        "d_skip": ParamDef(L + (heads,), ("layers", "none"), "ones"),
+        "norm": ParamDef(L + (d_inner,), ("layers", "inner"), "ones"),
+        "out_proj": ParamDef(L + (d_inner, d), ("layers", "inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, width 4. x (B,S,C); w (4,C).
+    Returns (y, new_state) where state caches the last 3 inputs."""
+    width = w.shape[0]
+    if state is None:
+        pads = [jnp.pad(x, ((0, 0), (width - 1 - i, 0), (0, 0)))[:, :x.shape[1]]
+                for i in range(width)]
+        # pads[i] = x shifted so that pads[i][t] = x[t - (width-1-i)]
+        y = sum(pads[i] * w[i] for i in range(width)) + b
+        new_state = x[:, -(width - 1):, :] if x.shape[1] >= width - 1 else \
+            jnp.pad(x, ((0, 0), (width - 1 - x.shape[1], 0), (0, 0)))
+    else:
+        buf = jnp.concatenate([state, x], axis=1)       # (B, width, C) for S=1
+        y = sum(buf[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+        new_state = buf[:, -(width - 1):, :]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, a_log, B, C):
+    """Chunked SSD scan.
+    xh (B,S,H,hd), dt (B,S,H) (already softplus'd), B/C (B,S,state).
+    Returns y (B,S,H,hd) and final state (B,H,hd,state)."""
+    b, s, h, hd = xh.shape
+    st = B.shape[-1]
+    c = min(CHUNK, s)
+    nch = s // c
+    assert nch * c == s, (s, c)
+    loga = -jnp.exp(a_log.astype(jnp.float32))          # (H,) negative
+    # per-token log decay: (B,S,H)
+    dl = dt.astype(jnp.float32) * loga
+    dlc = dl.reshape(b, nch, c, h)
+    cum = jnp.cumsum(dlc, axis=2)                       # within-chunk cumsum
+    xc = xh.reshape(b, nch, c, h, hd).astype(jnp.float32)
+    Bc = B.reshape(b, nch, c, st).astype(jnp.float32)
+    Cc = C.reshape(b, nch, c, st).astype(jnp.float32)
+    dtc = dt.reshape(b, nch, c, h).astype(jnp.float32)
+
+    # --- intra-chunk (quadratic within c) ---
+    # score[t,tau] = exp(cum_t - cum_tau) * (C_t . B_tau) * dt_tau, tau <= t
+    gap = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (b,n,c,c,h)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(gap), 0.0)
+    cb = jnp.einsum("bncs,bnts->bnct", Cc, Bc)                   # (b,n,c_t,c_tau)
+    w_intra = decay * cb[..., None] * dtc[:, :, None, :, :]      # (b,n,t,tau,h)
+    y_intra = jnp.einsum("bntuh,bnuhd->bnthd", w_intra, xc)
+
+    # --- chunk states ---
+    # state_n = exp(cum_end - cum_tau) dt_tau B_tau x_tau^T summed over tau
+    end_gap = cum[:, :, -1:, :] - cum                             # (b,n,c,h)
+    contrib = jnp.einsum("bnch,bncs,bnchd->bnhds",
+                         jnp.exp(end_gap) * dtc, Bc, xc)          # (b,n,h,hd,st)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (b,n,h)
+
+    def step(hprev, inp):
+        contrib_n, cd = inp
+        hnew = cd[..., None, None] * hprev + contrib_n
+        return hnew, hprev                                       # emit PREV
+
+    h0 = jnp.zeros((b, h, hd, st))
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (contrib.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                      # (b,n,h,hd,st)
+
+    # --- inter-chunk: y_t += C_t . (exp(cum_t) * h_chunk_start) ---
+    y_inter = jnp.einsum("bncs,bnch,bnhds->bnchd",
+                         Cc, jnp.exp(cum), hprevs)
+    y = (y_intra + y_inter).reshape(b, s, h, hd)
+    return y, hlast
+
+
+def mamba2_block(x, w, cfg: ModelConfig, state: Mamba2State | None = None,
+                 cim_cfg=None):
+    """x (B,S,D) -> (y, new_state).  state=None -> train/prefill path."""
+    b, s, d = x.shape
+    d_inner, heads, hd, st, groups, conv_dim = mamba2_dims(cfg)
+    zxbcdt = dense(x, w["in_proj"], cim_cfg)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + st, 2 * d_inner + 2 * st],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = None if state is None else state.conv
+    conv_out, new_conv = _causal_conv(conv_in, w["conv_w"], w["conv_b"],
+                                      conv_state)
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + st], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + w["dt_bias"])   # (B,S,H)
+    xh = xin.reshape(b, s, heads, hd)
+    if state is None or s > 1:
+        # train AND stateful prefill (s > 1) take the chunked path; the
+        # final chunk state seeds subsequent decode steps.  (Prefill
+        # always starts from an empty state in this framework, so the
+        # incoming state.h is zeros and needs no folding-in.)
+        pad = -s % CHUNK if s > CHUNK else 0
+        xp, dtp, Bp, Cp = xh, dt, Bc, Cc
+        if pad:
+            xp = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bp = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+            Cp = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        y, hlast = _ssd_chunked(xp, dtp, w["a_log"], Bp, Cp)
+        y = y[:, :s]
+        new_state = Mamba2State(hlast, new_conv, jnp.asarray(s, jnp.int32))
+    else:
+        # recurrent single step (S == 1)
+        loga = -jnp.exp(w["a_log"].astype(jnp.float32))
+        a = jnp.exp(dt[:, 0] * loga)                              # (B,H)
+        dBx = jnp.einsum("bh,bs,bhd->bhds", dt[:, 0], Bc[:, 0],
+                         xh[:, 0].astype(jnp.float32))
+        hnew = a[..., None, None] * state.h + dBx
+        y = jnp.einsum("bs,bhds->bhd", Cc[:, 0], hnew)[:, None]
+        new_state = Mamba2State(hnew, new_conv, state.index + 1)
+    y = y.astype(x.dtype).reshape(b, s, d_inner)
+    y = y + xh.reshape(b, s, d_inner) * jnp.repeat(w["d_skip"], hd).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+    return dense(y, w["out_proj"], cim_cfg), new_state
+
+
+def init_mamba2_state(batch: int, cfg: ModelConfig, dtype=jnp.float32):
+    d_inner, heads, hd, st, groups, conv_dim = mamba2_dims(cfg)
+    return Mamba2State(jnp.zeros((batch, heads, hd, st), jnp.float32),
+                       jnp.zeros((batch, 3, conv_dim), dtype),
+                       jnp.zeros((), jnp.int32))
+
+
+# ===================================================================
+# xLSTM
+# ===================================================================
+
+class XLSTMState(NamedTuple):
+    # mLSTM: matrix memory; sLSTM: scalar tuples — both padded into one
+    C: jax.Array           # (B, H, hd, hd) mLSTM / (B, H, hd, 1) sLSTM c,n
+    n: jax.Array           # (B, H, hd)
+    m: jax.Array           # (B, H)
+    h: jax.Array           # (B, H, hd)  (sLSTM recurrent h)
+    index: jax.Array
+
+
+def xlstm_dims(cfg: ModelConfig):
+    heads = cfg.num_heads
+    d_up = 2 * cfg.d_model
+    hd = d_up // heads
+    return d_up, heads, hd
+
+
+def mlstm_defs(cfg: ModelConfig, layers: int) -> dict:
+    d = cfg.d_model
+    d_up, heads, hd = xlstm_dims(cfg)
+    L = (layers,)
+    return {
+        "up": ParamDef(L + (d, 2 * d_up), ("layers", "embed", "inner")),
+        "wq": ParamDef(L + (d_up, d_up), ("layers", "inner", "heads")),
+        "wk": ParamDef(L + (d_up, d_up), ("layers", "inner", "heads")),
+        "wv": ParamDef(L + (d_up, d_up), ("layers", "inner", "heads")),
+        "wif": ParamDef(L + (d_up, 2 * heads), ("layers", "inner", "none")),
+        "norm": ParamDef(L + (d_up,), ("layers", "inner"), "ones"),
+        "down": ParamDef(L + (d_up, d), ("layers", "inner", "embed")),
+    }
+
+
+def slstm_defs(cfg: ModelConfig, layers: int) -> dict:
+    d = cfg.d_model
+    heads = cfg.num_heads
+    hd = d // heads
+    L = (layers,)
+    return {
+        "wx": ParamDef(L + (d, 4 * d), ("layers", "embed", "inner")),
+        "wr": ParamDef(L + (heads, hd, 4 * hd), ("layers", "none", "none", "none")),
+        "norm": ParamDef(L + (d,), ("layers", "embed"), "ones"),
+        "up1": ParamDef(L + (d, 4 * d // 3), ("layers", "embed", "mlp")),
+        "up2": ParamDef(L + (4 * d // 3, d), ("layers", "mlp", "embed")),
+    }
+
+
+def _mlstm_chunked(q, k, v, logi, logf, chunk: int = CHUNK):
+    """Chunked mLSTM: O(S·c) memory instead of the O(S²) parallel form —
+    required for 32k+ prefill.  Same gated-linear-attention recurrence as
+    the parallel form; state (C, n, m) is carried across chunks with
+    max-stabilization (the xLSTM paper's chunkwise formulation).
+
+    q/k/v (B,S,H,hd) — k pre-scaled by 1/sqrt(hd); logi/logf (B,S,H).
+    Returns y (B,S,H,hd) f32 and the final XLSTM-style (C, n, m).
+    """
+    b, s, h, hd = q.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nch = s // c
+    qc = q.reshape(b, nch, c, h, hd).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nch, c, h, hd).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nch, c, h, hd).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    lic = logi.reshape(b, nch, c, h).transpose(1, 0, 2, 3)
+    lfc = logf.reshape(b, nch, c, h).transpose(1, 0, 2, 3)
+
+    def step(carry, inp):
+        C, n, m = carry                       # (B,H,hd,hd), (B,H,hd), (B,H)
+        qb, kb, vb, li, lf = inp
+        F = jnp.cumsum(lf, axis=1)            # (B,c,H) within-chunk decay
+        # intra-chunk parallel part (c x c)
+        sc = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+        sc = jnp.where(tri, sc, -jnp.inf)
+        # inter-chunk: query t sees carried state decayed by F_t, amp m
+        m_inter = F + m[:, None, :]                         # (B,c,H)
+        m_intra = jnp.max(sc, axis=2)                       # (B,c,H)
+        m_tot = jnp.maximum(m_inter, m_intra)
+        d_intra = jnp.exp(sc - m_tot[:, :, None, :])        # (B,c,c,H)
+        d_inter = jnp.exp(m_inter - m_tot)                  # (B,c,H)
+        qk = jnp.einsum("bthd,buhd->btuh", qb, kb)
+        num = (jnp.einsum("btuh,buhd->bthd", qk * d_intra, vb)
+               + d_inter[..., None] * jnp.einsum("bhde,bthe->bthd", C, qb))
+        den = (jnp.einsum("btuh,buhd,bthd->bth", d_intra, kb, qb)
+               + d_inter * jnp.einsum("bhe,bthe->bth", n, qb))
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))[..., None]
+        # carry update: decay whole chunk into state
+        Fend = F[:, -1, :]                                  # (B,H)
+        m_new = jnp.maximum(Fend + m, jnp.max(Fend[:, None, :] - F + li, axis=1))
+        wgt = jnp.exp(Fend[:, None, :] - F + li - m_new[:, None, :])
+        C_new = (jnp.exp(Fend + m - m_new)[..., None, None] * C
+                 + jnp.einsum("buh,buhd,buhe->bhde", wgt, vb, kb))
+        n_new = (jnp.exp(Fend + m - m_new)[..., None] * n
+                 + jnp.einsum("buh,buhd->bhd", wgt, kb))
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((b, h, hd, hd))
+    n0 = jnp.zeros((b, h, hd))
+    m0 = jnp.full((b, h), -1e30)
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return y, (C, n, m)
+
+
+def mlstm_block(x, w, cfg: ModelConfig, state: XLSTMState | None = None,
+                cim_cfg=None):
+    """Parallel (train/prefill) or recurrent (decode) mLSTM."""
+    b, s, d = x.shape
+    d_up, heads, hd = xlstm_dims(cfg)
+    u, gate = jnp.split(dense(x, w["up"], cim_cfg), 2, axis=-1)
+    q = dense(u, w["wq"], cim_cfg).reshape(b, s, heads, hd)
+    k = dense(u, w["wk"], cim_cfg).reshape(b, s, heads, hd) / jnp.sqrt(
+        jnp.asarray(hd, x.dtype))
+    v = dense(u, w["wv"], cim_cfg).reshape(b, s, heads, hd)
+    i_f = dense(u, w["wif"], cim_cfg).astype(jnp.float32)
+    logi, logf_raw = jnp.split(i_f.reshape(b, s, heads, 2), 2, axis=-1)
+    logi, logf_raw = logi[..., 0], logf_raw[..., 0]
+    logf = jax.nn.log_sigmoid(logf_raw)                 # (B,S,H)
+
+    if state is None:
+        if s > CHUNK and s % CHUNK == 0:
+            # chunked path: O(S·c) memory — the only viable 32k+ prefill
+            y, (C, n, m) = _mlstm_chunked(q, k, v, logi, logf)
+            new_state = XLSTMState(C, n, m, jnp.zeros((b, heads, hd)),
+                                   jnp.asarray(s, jnp.int32))
+        else:
+            F = jnp.cumsum(logf, axis=1)                # (B,S,H)
+            # score[t,tau] = F_t - F_tau + logi_tau  (tau <= t)
+            sc = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+            tri = jnp.tril(jnp.ones((s, s), bool))[None, :, :, None]
+            sc = jnp.where(tri, sc, -jnp.inf)
+            mstab = jnp.max(sc, axis=2, keepdims=True)  # (B,S,1,H)
+            dmat = jnp.exp(sc - mstab)                  # stabilized decays
+            qk = jnp.einsum("bthd,buhd->btuh", q.astype(jnp.float32),
+                            k.astype(jnp.float32))
+            att = qk * dmat
+            norm = jnp.maximum(jnp.abs(att.sum(axis=2)),
+                               jnp.exp(-mstab[:, :, 0, :]))  # (B,S,H)
+            y = jnp.einsum("btuh,buhd->bthd", att, v.astype(jnp.float32))
+            y = y / norm[..., None]
+            new_state = _mlstm_final_state(k, v, logi, logf, b, heads, hd)
+    else:
+        m_prev, C_prev, n_prev = state.m, state.C, state.n
+        m_new = jnp.maximum(logf[:, 0] + m_prev, logi[:, 0])      # (B,H)
+        fdec = jnp.exp(logf[:, 0] + m_prev - m_new)
+        iamp = jnp.exp(logi[:, 0] - m_new)
+        C_new = (fdec[..., None, None] * C_prev
+                 + iamp[..., None, None] * jnp.einsum(
+                     "bhd,bhe->bhde", v[:, 0].astype(jnp.float32),
+                     k[:, 0].astype(jnp.float32)))
+        n_new = fdec[..., None] * n_prev + iamp[..., None] * k[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhde,bhe->bhd", C_new, q[:, 0].astype(jnp.float32))
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n_new,
+                                             q[:, 0].astype(jnp.float32))),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]
+        new_state = XLSTMState(C_new, n_new, m_new, state.h, state.index + 1)
+    y = y.astype(x.dtype).reshape(b, s, d_up)
+    y = rms_norm(y, w["norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return dense(y, w["down"], cim_cfg), new_state
+
+
+def _mlstm_final_state(k, v, logi, logf, b, heads, hd):
+    """Recurrent state equivalent to having consumed the whole prefix."""
+    s = k.shape[1]
+    F = jnp.cumsum(logf, axis=1)
+    tail = F[:, -1:, :] - F                            # decay from tau to end
+    sc = tail + logi                                   # (B,S,H)
+    m = jnp.max(sc, axis=1)                            # (B,H)
+    wgt = jnp.exp(sc - m[:, None, :])
+    C = jnp.einsum("buh,buhd,buhe->bhde", wgt, v.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    n = jnp.einsum("buh,buhd->bhd", wgt, k.astype(jnp.float32))
+    return XLSTMState(C, n, m, jnp.zeros((b, heads, hd)),
+                      jnp.asarray(s, jnp.int32))
+
+
+def slstm_block(x, w, cfg: ModelConfig, state: XLSTMState | None = None,
+                cim_cfg=None):
+    """sLSTM: sequential scan with exponential gating (per head)."""
+    b, s, d = x.shape
+    heads = cfg.num_heads
+    hd = d // heads
+    gates_x = dense(x, w["wx"], cim_cfg).astype(jnp.float32)      # (B,S,4d)
+    gates_x = gates_x.reshape(b, s, 4, heads, hd)
+    wr = w["wr"].astype(jnp.float32)                              # (H,hd,4hd)
+
+    if state is None:
+        c0 = jnp.zeros((b, heads, hd))
+        n0 = jnp.ones((b, heads, hd))
+        m0 = jnp.zeros((b, heads))
+        h0 = jnp.zeros((b, heads, hd))
+    else:
+        c0, n0, m0, h0 = state.C[..., 0], state.n, state.m, state.h
+
+    def step(carry, gx):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, wr).reshape(b, heads, 4, hd)
+        zi = gx[:, 0] + rec[:, :, 0]
+        ii = gx[:, 1] + rec[:, :, 1]
+        fi = gx[:, 2] + rec[:, :, 2]
+        oi = gx[:, 3] + rec[:, :, 3]
+        logf = jax.nn.log_sigmoid(fi).mean(-1)          # per-head scalar gate
+        logi = ii.mean(-1)
+        m_new = jnp.maximum(logf + m, logi)
+        fdec = jnp.exp(logf + m - m_new)[..., None]
+        iamp = jnp.exp(logi - m_new)[..., None]
+        zt = jnp.tanh(zi)
+        c_new = fdec * c + iamp * zt
+        n_new = fdec * n + iamp
+        h_new = jax.nn.sigmoid(oi) * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, m_new, h_new), h_new
+
+    gseq = gates_x.transpose(1, 0, 2, 3, 4)             # (S,B,4,H,hd)
+    (c, n, m, h), ys = jax.lax.scan(step, (c0, n0, m0, h0), gseq)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, w["norm"], cfg.norm_eps)
+    y = dense(jax.nn.gelu(dense(y, w["up1"], cim_cfg)), w["up2"], cim_cfg)
+    new_state = XLSTMState(c[..., None], n, m, h, (state.index + s) if state
+                           else jnp.asarray(s, jnp.int32))
+    return y, new_state
+
+
+def init_xlstm_state(batch: int, cfg: ModelConfig, kind: str):
+    if kind == "mlstm":
+        d_up, heads, hd = xlstm_dims(cfg)
+        return XLSTMState(jnp.zeros((batch, heads, hd, hd)),
+                          jnp.zeros((batch, heads, hd)),
+                          jnp.full((batch, heads), -1e30),
+                          jnp.zeros((batch, heads, hd)),
+                          jnp.zeros((), jnp.int32))
+    heads = cfg.num_heads
+    hd = cfg.d_model // heads
+    return XLSTMState(jnp.zeros((batch, heads, hd, 1)),
+                      jnp.ones((batch, heads, hd)),
+                      jnp.zeros((batch, heads)),
+                      jnp.zeros((batch, heads, hd)),
+                      jnp.zeros((), jnp.int32))

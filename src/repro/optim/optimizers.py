@@ -1,0 +1,214 @@
+"""Optimizers as (init, state_defs, update) triples.
+
+``state_defs(param_defs)`` mirrors the ParamDef system used for model
+parameters so the multi-pod dry-run can construct ShapeDtypeStructs with
+NamedShardings for the optimizer state without ever allocating it — the
+optimizer state inherits the logical axes of its parameter (AdamW
+moments) or the axes minus the factored dim (Adafactor).
+
+Adafactor keeps factored f32 second moments (row/col vectors), the
+ZeRO-friendly choice that makes 1T-param training state fit (DESIGN.md
+§Kimi-K2 feasibility note).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ParamDef, is_def
+
+
+class Optimizer(NamedTuple):
+    init: Callable          # params -> state
+    state_defs: Callable    # param_defs -> ParamDef pytree (dry-run)
+    update: Callable        # (grads, state, params, step) -> (params, state)
+
+
+# ------------------------------------------------------------- schedules
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_lr(v: float) -> Callable:
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), grads), g
+
+
+# ---------------------------------------------------------------- AdamW
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          max_grad_norm: float = 1.0, state_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        zero = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"mu": jax.tree.map(zero, params),
+                "nu": jax.tree.map(zero, params)}
+
+    def state_defs(param_defs):
+        like = lambda d: ParamDef(d.shape, d.axes, "zeros", state_dtype)
+        return {"mu": jax.tree.map(like, param_defs, is_leaf=is_def),
+                "nu": jax.tree.map(like, param_defs, is_leaf=is_def)}
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            gnorm = global_norm(grads)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def leaf(p, g, mu, nu):
+            g = g.astype(state_dtype)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            upd = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(state_dtype)
+            return (p - lr_t * upd.astype(p.dtype)).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(leaf, params, grads, state["mu"], state["nu"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_mu, "nu": new_nu}, {"grad_norm": gnorm,
+                                                     "lr": lr_t}
+
+    return Optimizer(init, state_defs, update)
+
+
+# ------------------------------------------------------------ Adafactor
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor(lr: Callable | float, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, max_grad_norm: float = 1.0,
+              min_dim_size_to_factor: int = 2) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), the
+    memory-frugal choice for >=7B training: state is O(rows + cols) per
+    matrix instead of O(rows*cols)."""
+    lr_fn = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(leaf, params)
+
+    def state_defs(param_defs):
+        def leaf(d: ParamDef):
+            if _factored(d.shape):
+                return {"r": ParamDef(d.shape[:-1], d.axes[:-1], "zeros",
+                                      jnp.float32),
+                        "c": ParamDef(d.shape[:-2] + d.shape[-1:],
+                                      d.axes[:-2] + d.axes[-1:], "zeros",
+                                      jnp.float32)}
+            return {"v": ParamDef(d.shape, d.axes, "zeros", jnp.float32)}
+        return jax.tree.map(leaf, param_defs, is_leaf=is_def)
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            gnorm = global_norm(grads)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def leaf(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if "r" in s:
+                r = beta * s["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = (r[..., None] / jnp.maximum(
+                    r.mean(axis=-1, keepdims=True), eps)[..., None]) * \
+                    c[..., None, :]
+                upd = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return (p - lr_t * upd.astype(p.dtype)).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        outs = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_s = tdef.unflatten([o[1] for o in outs])
+        return new_p, new_s, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, state_defs, update)
+
+
+# ----------------------------------------------------------------- SGD
+
+def sgd(lr: Callable | float, momentum: float = 0.0,
+        max_grad_norm: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        if momentum:
+            return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                      params)}
+        return {}
+
+    def state_defs(param_defs):
+        if momentum:
+            like = lambda d: ParamDef(d.shape, d.axes, "zeros", jnp.float32)
+            return {"m": jax.tree.map(like, param_defs, is_leaf=is_def)}
+        return {}
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr_t = lr_fn(step)
+        if momentum:
+            m = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                             state["m"], grads)
+            new_p = jax.tree.map(lambda p, m: (p - lr_t * m).astype(p.dtype),
+                                 params, m)
+            return new_p, {"m": m}, {"grad_norm": gnorm, "lr": lr_t}
+        new_p = jax.tree.map(lambda p, g: (p - lr_t * g).astype(p.dtype),
+                             params, grads)
+        return new_p, {}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, state_defs, update)

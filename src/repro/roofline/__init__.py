@@ -1,0 +1,2 @@
+from .analysis import (HW, V5E, RooflineReport, analyze_compiled,
+                       collective_bytes, model_flops)  # noqa: F401

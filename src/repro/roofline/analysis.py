@@ -1,0 +1,196 @@
+"""Three-term roofline from a compiled (dry-run) executable.
+
+    compute    = HLO_FLOPs_per_device   / peak_FLOP/s
+    memory     = HLO_bytes_per_device   / HBM_bw
+    collective = wire_bytes_per_device  / ICI_link_bw
+
+``compiled.cost_analysis()`` on a partitioned module reports PER-DEVICE
+flops / bytes (verified: an 8-way-sharded matmul reports 1/8 of the math)
+so no further division by chip count is applied.
+
+collective_bytes parses the post-optimization HLO: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute result
+shape is converted to wire bytes with the standard ring formulas:
+
+    all-reduce       2·S·(g-1)/g        (reduce-scatter + all-gather)
+    all-gather       S·(g-1)/g          (S = full gathered size)
+    reduce-scatter   S_out·(g-1)        (S_out = per-shard output)
+    all-to-all       S·(g-1)/g
+    collective-permute  S
+
+where g is the replica-group size parsed from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """Per-chip hardware constants."""
+    name: str
+    peak_flops: float          # FLOP/s (bf16)
+    hbm_bw: float              # B/s
+    ici_bw: float              # B/s per link
+
+
+V5E = HW("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        num_groups, group_size = int(m.group(1)), int(m.group(2))
+        return max(group_size, 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return total_devices
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> dict:
+    """Per-device wire bytes by collective kind, from optimized HLO."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op").lower()
+        size = _shape_bytes(m.group("type"))
+        g = _group_size(line, total_devices)
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif op == "all-gather":
+            wire = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = size * (g - 1)
+        elif op == "all-to-all":
+            wire = size * (g - 1) / g
+        else:                                     # collective-permute
+            wire = float(size)
+        out[op] += wire
+        counts[op] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg, tokens: int, kind: str) -> float:
+    """6·N_active·D for train, 2·N_active·D per generated/processed token
+    for serving — the 'useful work' denominator."""
+    n = cfg.active_param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_total: float
+    useful_ratio: float        # MODEL_FLOPS / (HLO_FLOPs x chips)
+    peak_fraction: float       # t_compute / max(all terms) = roofline frac
+    collectives: dict
+    memory_stats: Optional[dict] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+                f"{self.t_collective*1e3:.2f} | {self.bottleneck} | "
+                f"{self.useful_ratio:.2f} | {self.peak_fraction:.2f} |")
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, cfg=None, tokens: int = 0,
+                     kind: str = "train", hw: HW = V5E) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    # XLA's cost analysis visits while (scan) bodies ONCE — useless for
+    # scanned models.  The loop-aware HLO roll-up is the real source;
+    # XLA's numbers are kept for reference/validation on loop-free cells.
+    from .hlo_cost import analyze_text
+    text = compiled.as_text()
+    cost = analyze_text(text, chips)
+    flops = cost.flops
+    bytes_acc = cost.bytes
+    coll = {"total": cost.coll_bytes, **cost.coll_by_kind,
+            "unknown_trip_loops": cost.unknown_trips,
+            "xla_flops_once": float(ca.get("flops", 0.0)),
+            "xla_bytes_once": float(ca.get("bytes accessed", 0.0))}
+
+    t_comp = flops / hw.peak_flops
+    t_mem = bytes_acc / hw.hbm_bw
+    t_coll = coll["total"] / hw.ici_bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, tokens, kind) if cfg is not None and tokens else 0.0
+    useful = mf / (flops * chips) if flops else 0.0
+    peak_frac = t_comp / max(max(terms.values()), 1e-30)
+
+    ms = None
+    try:
+        m = compiled.memory_analysis()
+        ms = {"argument_bytes": m.argument_size_in_bytes,
+              "output_bytes": m.output_size_in_bytes,
+              "temp_bytes": m.temp_size_in_bytes,
+              "alias_bytes": m.alias_size_in_bytes}
+    except Exception:
+        pass
+
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=bytes_acc,
+        wire_bytes_per_device=coll["total"],
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck, model_flops_total=mf, useful_ratio=useful,
+        peak_fraction=peak_frac, collectives=coll, memory_stats=ms)

@@ -1,0 +1,2 @@
+from .engine import (ServeEngine, Request, make_prefill_step,
+                     make_decode_step, greedy_sample)  # noqa: F401

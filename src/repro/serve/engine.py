@@ -1,0 +1,128 @@
+"""Batched serving engine over the models' prefill/decode interface.
+
+The paper is an inference-accelerator paper, so serving is the primary
+end-to-end driver (examples/serve_cim.py): weights can be served from
+packed-ternary HBM storage (the paper's density claim) by converting
+params with core.cim_linear.ternarize_params — every dense() inside
+prefill/decode then routes through the ternary_matmul kernel.
+
+Engine model: requests are queued, bucketed by prompt length (identical
+lengths batch exactly — no padding approximations in scoring), prefilled
+as a batch, then decoded step-by-step with per-row EOS/max-token
+termination.  The decode batch keeps running while any row is live;
+finished rows keep decoding into a scratch token that is discarded
+(standard fixed-batch serving).
+
+``make_decode_step`` is the jitted `serve_step` the multi-pod dry-run
+lowers for the decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(model, capacity: int, cim=None) -> Callable:
+    def prefill_step(params, batch):
+        logits, state = model.prefill(params, batch, capacity, cim=cim)
+        return greedy_sample(logits), state
+    return jax.jit(prefill_step)
+
+
+def make_decode_step(model, cim=None) -> Callable:
+    def decode_step(params, token, state):
+        logits, state = model.decode(params, token[:, None], state, cim=cim)
+        return greedy_sample(logits), state
+    return jax.jit(decode_step, donate_argnums=(2,))
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: Any                      # (S,) int32
+    max_new: int = 16
+    eos_id: int = -1                 # -1: never
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, model, params, capacity: int = 512,
+                 max_batch: int = 8, cim=None, extra_inputs=None):
+        self.model = model
+        self.params = params
+        self.capacity = capacity
+        self.max_batch = max_batch
+        self.cim = cim
+        self.extra_inputs = extra_inputs or {}
+        self._prefill = make_prefill_step(model, capacity, cim)
+        self._decode = make_decode_step(model, cim)
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self.steps_run = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _next_bucket(self) -> list[Request]:
+        """Pop up to max_batch queued requests sharing one prompt length."""
+        if not self.queue:
+            return []
+        length = len(self.queue[0].prompt)
+        batch = [r for r in self.queue if len(r.prompt) == length]
+        batch = batch[: self.max_batch]
+        for r in batch:
+            self.queue.remove(r)
+        return batch
+
+    def _batch_inputs(self, reqs: list[Request]) -> dict:
+        toks = jnp.stack([jnp.asarray(r.prompt, jnp.int32) for r in reqs])
+        batch = {"tokens": toks}
+        for k, fn in self.extra_inputs.items():
+            batch[k] = fn(len(reqs))
+        return batch
+
+    def run(self) -> list[Request]:
+        """Serve the whole queue; returns completed requests."""
+        while self.queue:
+            reqs = self._next_bucket()
+            t0 = time.monotonic()
+            tok, state = self._prefill(self.params, self._batch_inputs(reqs))
+            self.steps_run += 1
+            live = [True] * len(reqs)
+            for i, (r, t) in enumerate(zip(reqs, jax.device_get(tok))):
+                r.out_tokens.append(int(t))
+                if len(r.out_tokens) >= r.max_new or int(t) == r.eos_id:
+                    live[i] = False
+            max_new = max(r.max_new for r in reqs)
+            for _ in range(max_new - 1):
+                if not any(live):
+                    break
+                tok, state = self._decode(self.params, tok, state)
+                self.steps_run += 1
+                for i, (r, t) in enumerate(zip(reqs, jax.device_get(tok))):
+                    if not live[i]:
+                        continue
+                    r.out_tokens.append(int(t))
+                    if len(r.out_tokens) >= r.max_new or int(t) == r.eos_id:
+                        live[i] = False
+            dt = time.monotonic() - t0
+            for r in reqs:
+                r.done = True
+                r.latency_s = dt
+                self.completed.append(r)
+        return self.completed
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(r.out_tokens) for r in self.completed)

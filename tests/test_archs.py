@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, output shapes + no NaNs; prefill/decode
+consistency against the training-mode forward pass.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data import DataConfig, batch_for
+from repro.models import registry
+from repro.optim import adamw
+
+ARCHS = list(configs.ARCHS)
+
+
+def _smoke(arch, dtype=None):
+    cfg = configs.smoke(arch)
+    if dtype is not None:
+        cfg = dataclasses.replace(cfg, dtype=dtype)
+    return cfg
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=s, global_batch=b,
+                    seed=seed)
+    return batch_for(cfg, dc, jnp.asarray(0))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = _smoke(arch)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    logits = model.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = _smoke(arch)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(1))
+    batch = _batch(cfg, seed=1)
+    opt = adamw(1e-3)
+    ost = opt.init(params)
+
+    @jax.jit
+    def step(params, ost, batch):
+        loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(
+            params)
+        new_p, new_o, m = opt.update(grads, ost, params, 0)
+        return loss, new_p, m["grad_norm"]
+
+    loss, new_p, gnorm = step(params, ost, batch)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    assert bool(jnp.isfinite(gnorm))
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x.astype(jnp.float32)))),
+        jax.tree.map(lambda a, b: a.astype(jnp.float32) -
+                     b.astype(jnp.float32), params, new_p), 0.0)
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """decode(t_k | prefill(t_0..k-1)) logits == forward logits column k-1/k.
+
+    MoE capacity is made non-binding: capacity-overflow drops depend on
+    the total token count, so a 12-token prefill and a 16-token forward
+    legitimately drop different tokens at cf=1.25."""
+    cfg = _smoke(arch, dtype=jnp.float32)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=64.0)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(2))
+    b, s, k = 2, 16, 12
+    batch = _batch(cfg, b=b, s=s, seed=2)
+    full_logits = model.forward(params, batch).astype(jnp.float32)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :k]
+    pre_batch.pop("labels", None)
+    logits_k, state = model.prefill(params, pre_batch, capacity=s)
+    got = logits_k[:, -1].astype(jnp.float32)
+    want = full_logits[:, k - 1]
+    assert jnp.allclose(got, want, atol=2e-3, rtol=2e-3), (
+        float(jnp.max(jnp.abs(got - want))))
+
+    tok = batch["tokens"][:, k][:, None]
+    logits_d, state = model.decode(params, tok, state)
+    got = logits_d[:, -1].astype(jnp.float32)
+    want = full_logits[:, k]
+    assert jnp.allclose(got, want, atol=2e-3, rtol=2e-3), (
+        float(jnp.max(jnp.abs(got - want))))
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "mixtral-8x7b",
+                                  "xlstm-125m", "zamba2-7b"])
+def test_multi_step_decode_no_nan(arch):
+    cfg = _smoke(arch, dtype=jnp.float32)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(3))
+    batch = _batch(cfg, b=1, s=8, seed=3)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    logits, state = model.prefill(params, pre, capacity=32)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(5):
+        logits, state = model.decode(params, tok, state)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned hyperparameters."""
+    table = {
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+    }
+    for arch, (L, d, h, kv, ff, v) in table.items():
+        cfg = configs.get(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == h, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == v, arch
+    assert configs.get("kimi-k2-1t-a32b").num_experts == 384
+    assert configs.get("kimi-k2-1t-a32b").experts_per_token == 8
+    assert configs.get("mixtral-8x7b").num_experts == 8
+    assert configs.get("zamba2-7b").ssm_state == 64
+
+
+def test_moe_param_count_kimi_is_about_1t():
+    cfg = configs.get("kimi-k2-1t-a32b")
+    n = cfg.param_count()
+    assert 0.9e12 < n < 1.4e12, n
+    na = cfg.active_param_count()
+    assert 2e10 < na < 6e10, na

@@ -1,0 +1,90 @@
+"""Checkpointing: roundtrip, atomicity under mid-save crashes, GC."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+
+
+def _tree(key=0):
+    k = jax.random.key(key)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)),
+                   "b": jnp.zeros((4,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": [jnp.ones((3,)), jnp.arange(5)],
+    }
+
+
+def test_roundtrip_with_target(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t, extra={"note": "hi"})
+    got, extra = ck.restore(str(tmp_path), target=t)
+    assert extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        assert jnp.array_equal(a, b)
+
+
+def test_bfloat16_preserved(tmp_path):
+    t = {"x": jnp.asarray([1.5, -2.25], jnp.bfloat16)}
+    ck.save(str(tmp_path), 0, t)
+    got, _ = ck.restore(str(tmp_path), target=t)
+    assert got["x"].dtype == jnp.bfloat16
+    assert jnp.array_equal(t["x"], got["x"])
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 5, 9, 13):
+        ck.save(str(tmp_path), s, t)
+    assert ck.latest_step(str(tmp_path)) == 13
+    removed = ck.gc_old_steps(str(tmp_path), keep=2)
+    assert removed == [1, 5]
+    assert ck.available_steps(str(tmp_path)) == [9, 13]
+
+
+def test_crash_mid_save_preserves_previous(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 10, t)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        ck.save(str(tmp_path), 20, t, _fail_after_files=1)
+    # the wreckage is a .tmp dir; step 10 is still the latest COMPLETE one
+    assert ck.latest_step(str(tmp_path)) == 10
+    got, _ = ck.restore(str(tmp_path), target=t)
+    assert jnp.array_equal(got["params"]["w"], t["params"]["w"])
+    # next save cleans the wreckage
+    ck.save(str(tmp_path), 20, t)
+    assert ck.latest_step(str(tmp_path)) == 20
+
+
+def test_restore_without_target_builds_dict(tmp_path):
+    t = {"a": {"b": jnp.ones((2, 2))}, "c": jnp.zeros((3,))}
+    ck.save(str(tmp_path), 3, t)
+    got, _ = ck.restore(str(tmp_path))
+    assert jnp.array_equal(got["a"]["b"], t["a"]["b"])
+    assert jnp.array_equal(got["c"], t["c"])
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Restore with explicit (single-device) shardings — the re-shard path."""
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    shardings = jax.tree.map(lambda _: sh, t)
+    got, _ = ck.restore(str(tmp_path), target=t, shardings=shardings)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert jnp.array_equal(a, b)
+    assert all(l.sharding == sh for l in jax.tree.leaves(got))
+
+
+def test_manager_interval(tmp_path):
+    m = ck.CheckpointManager(str(tmp_path), interval=5, keep=2)
+    t = _tree()
+    for s in range(12):
+        m.maybe_save(s, t)
+    assert ck.available_steps(str(tmp_path)) == [5, 10]

@@ -1,0 +1,108 @@
+"""Tests for the TL-nvSRAM-CIM functional macro (store/restore/CIM modes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cim, device_models as dm, ternary
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestStoreRestore:
+    def test_store_levels_table1(self):
+        trits = jnp.array([1, 0, -1])
+        levels = cim.store_trits_to_levels(trits)
+        np.testing.assert_array_equal(np.asarray(levels),
+                                      [cim.LRS, cim.MRS, cim.HRS])
+
+    def test_ideal_roundtrip(self):
+        trits = jnp.array([-1, 0, 1, 1, 0, -1], dtype=jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(cim.roundtrip_store_restore(trits)), np.asarray(trits))
+
+    def test_nominal_resistance_restore(self):
+        """With nominal (variation-free) resistances the differential
+        discharge comparison must decode every state correctly."""
+        d = dm.DeviceParams()
+        trits = jnp.array([-1, 0, 1], dtype=jnp.int8)
+        levels = cim.store_trits_to_levels(trits)
+        r = dm.level_resistance(levels, d)
+        got = cim.restore_levels_to_trits(levels, resistances=r, device=d)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(trits))
+
+    def test_optimal_mrs_is_paper_value(self):
+        # §3.2: MRS maximizing min(MRS/LRS, HRS/MRS) evaluates to ~282 kΩ
+        assert abs(dm.optimal_mrs(80e3, 1e6) - 282.8e3) < 1e3
+
+
+class TestCIMMode:
+    def test_exact_equals_int_matmul_small(self):
+        """With 16-row groups the ADC covers counts 0..31; only the extreme
+        all-(-1) count of 32 saturates. For random +-1/0 data the CIM MAC
+        must equal the integer matmul."""
+        key = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.randint(k1, (5, 4, 37), -1, 2, dtype=jnp.int8)
+        w = jax.random.randint(k2, (5, 37, 13), -1, 2, dtype=jnp.int8)
+        cfg = cim.MacroConfig()
+        got = cim.cim_matmul_int(x, w, cfg)
+        xi = ternary.from_balanced_ternary(x)
+        wi = ternary.from_balanced_ternary(w)
+        want = xi.astype(jnp.int32) @ wi.astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_adc_saturation_extreme_pattern(self):
+        """All products = -1 in a full 16-row group -> count 32 -> clips to
+        31 -> one LSB of error: the macro's intrinsic nonideality."""
+        cfg = cim.MacroConfig()
+        x = jnp.ones((1, 1, 16), dtype=jnp.int8)
+        w = -jnp.ones((1, 16, 1), dtype=jnp.int8)
+        got = int(cim.cim_matmul_int(x, w, cfg)[0, 0])
+        assert got == -15  # true -16, saturated by the 5-bit ADC
+        # with a 6-bit ADC the same pattern is exact
+        cfg6 = cim.MacroConfig(adc_bits=6)
+        assert int(cim.cim_matmul_int(x, w, cfg6)[0, 0]) == -16
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 5), st.integers(1, 5),
+           st.integers(1, 40))
+    @settings(max_examples=25, deadline=None)
+    def test_property_exactness_random_shapes(self, seed, qi, qw, k):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.randint(k1, (qi, 3, k), -1, 2, dtype=jnp.int8)
+        w = jax.random.randint(k2, (qw, k, 7), -1, 2, dtype=jnp.int8)
+        # 8-bit ADC -> headroom for any 16-row count: must be exact
+        cfg = cim.MacroConfig(adc_bits=8)
+        got = cim.cim_matmul_int(x, w, cfg)
+        want = (ternary.from_balanced_ternary(x).astype(jnp.int32)
+                @ ternary.from_balanced_ternary(w).astype(jnp.int32))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_float_cim_matmul_close_to_float(self):
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (8, 64))
+        w = 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (64, 32))
+        y_cim = cim.cim_matmul(x, w)
+        y_ref = x @ w
+        rel = float(jnp.linalg.norm(y_cim - y_ref) / jnp.linalg.norm(y_ref))
+        assert rel < 0.02, rel  # 5t x 5t quantization noise only
+
+    def test_signal_table_modes(self):
+        # Table 2 structure: store/restore are two-phase; CIM is single.
+        assert ("store", 1) in cim.SIGNAL_TABLE and ("store", 2) in cim.SIGNAL_TABLE
+        assert ("restore", 1) in cim.SIGNAL_TABLE and ("restore", 2) in cim.SIGNAL_TABLE
+        assert cim.SIGNAL_TABLE[("store", 2)]["STR2"] == cim.VSTR
+        assert cim.SIGNAL_TABLE[("cim", 0)]["CBL"] == "MAC"
+
+
+class TestMacroConfig:
+    def test_paper_geometry(self):
+        cfg = cim.MacroConfig()
+        assert cfg.trit_cols == 160
+        assert cfg.weights_per_row == 32
+        assert cfg.adcs == 32
+        assert cfg.trits_per_cell == 240
+        assert cfg.row_groups(256) == 16

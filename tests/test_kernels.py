@@ -1,0 +1,135 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles,
+with shape/dtype sweeps and hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.packing import pack_base3, pack_trits2
+from repro.core.ternary import to_balanced_ternary
+from repro.kernels import ops, ref
+from repro.kernels.cim_mac import cim_mac
+from repro.kernels.ternary_matmul import ternary_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = [(8, 16, 8), (32, 64, 16), (128, 128, 128), (100, 130, 70),
+          (256, 512, 96), (1, 4096, 8)]
+
+
+class TestTernaryMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", SHAPES)
+    @pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+    def test_base3_vs_ref(self, m, k, n, xdtype):
+        key = jax.random.PRNGKey(m * 1000 + k + n)
+        x = jax.random.normal(key, (m, k), xdtype)
+        vals = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -121, 122)
+        wp = pack_base3(vals)
+        scale = jax.random.uniform(jax.random.fold_in(key, 2), (n,)) * 0.01
+        got = ternary_matmul(x, wp, scale, interpret=True, bm=32, bn=32, bk=32)
+        want = ref.ternary_matmul_ref(x, wp, scale, "base3")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2 if xdtype == jnp.bfloat16 else 1e-5,
+                                   atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", [(8, 16, 8), (64, 128, 32), (33, 60, 17)])
+    def test_trit2_vs_ref(self, m, k, n):
+        key = jax.random.PRNGKey(k)
+        kpad = -k % 4
+        x = jax.random.normal(key, (m, k + kpad), jnp.float32)
+        trits = jax.random.randint(jax.random.fold_in(key, 1), (k + kpad, n),
+                                   -1, 2, dtype=jnp.int8)
+        wp = pack_trits2(trits)
+        got = ternary_matmul(x, wp, 1.0, mode="trit2", interpret=True,
+                             bm=32, bn=32, bk=32)
+        want = ref.ternary_matmul_ref(x, wp, 1.0, "trit2")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([16, 48, 96]),
+           st.sampled_from([8, 24, 40]))
+    @settings(max_examples=10, deadline=None)
+    def test_property_base3(self, seed, k, n):
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (5, k))
+        vals = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -121, 122)
+        wp = pack_base3(vals)
+        got = ternary_matmul(x, wp, 1.0, interpret=True, bm=8, bn=8, bk=16)
+        want = x @ vals.astype(jnp.float32)
+        # blocked K accumulation reorders f32 sums vs the single matmul;
+        # with |w| up to 121 the bound is ~1e-4 relative, not 1e-5.
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+
+
+class TestCimMacKernel:
+    @pytest.mark.parametrize("m,k,n", [(8, 16, 8), (16, 64, 16), (32, 200, 24),
+                                       (4, 37, 13)])
+    @pytest.mark.parametrize("qi,qw", [(5, 5), (1, 1), (3, 2)])
+    def test_vs_oracle(self, m, k, n, qi, qw):
+        key = jax.random.PRNGKey(m + k + n + qi * 10 + qw)
+        x = jax.random.randint(key, (qi, m, k), -1, 2, dtype=jnp.int8)
+        w = jax.random.randint(jax.random.fold_in(key, 1), (qw, k, n), -1, 2,
+                               dtype=jnp.int8)
+        got = cim_mac(x, w, adc_bits=5, bm=16, bn=16, bk=16, interpret=True)
+        want = ref.cim_mac_ref(x, w, adc_bits=5)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_adc_saturation_matches_oracle(self):
+        # the all-(-1)-products corner that saturates the 5-bit ADC
+        x = jnp.ones((1, 4, 16), dtype=jnp.int8)
+        w = -jnp.ones((1, 16, 4), dtype=jnp.int8)
+        got = cim_mac(x, w, adc_bits=5, bm=8, bn=8, bk=16, interpret=True)
+        want = ref.cim_mac_ref(x, w, adc_bits=5)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(got[0, 0]) == -15
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_exact_vs_int_matmul_with_wide_adc(self, seed):
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.randint(key, (2, 4, 48), -1, 2, dtype=jnp.int8)
+        w = jax.random.randint(jax.random.fold_in(key, 1), (2, 48, 8), -1, 2,
+                               dtype=jnp.int8)
+        got = cim_mac(x, w, adc_bits=8, bm=8, bn=8, bk=16, interpret=True)
+        from repro.core.ternary import from_balanced_ternary
+        want = (from_balanced_ternary(x).astype(jnp.int32)
+                @ from_balanced_ternary(w).astype(jnp.int32))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestOpsWrappers:
+    def test_pack_weights_base3_matmul(self):
+        key = jax.random.PRNGKey(0)
+        w = 0.02 * jax.random.normal(key, (96, 48))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (4, 10, 96))
+        pw = ops.pack_weights(w, "base3")
+        assert pw.data.dtype == jnp.uint8 and pw.data.shape == (96, 48)
+        y = ops.ternary_matmul(x, pw, interpret=True, bm=16, bn=16, bk=32)
+        rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+        assert rel < 0.02, rel
+
+    def test_pack_weights_trit2_density(self):
+        w = 0.02 * jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+        pw = ops.pack_weights(w, "trit2")
+        assert pw.data.shape == (32, 64)        # 4 trits/byte: 8x vs bf16
+        x = jax.random.normal(jax.random.PRNGKey(2), (8, 128))
+        y = ops.ternary_matmul(x, pw, interpret=True, bm=8, bn=16, bk=32)
+        # single-trit quantization is lossy; just require usable correlation
+        ref_y = x @ w
+        cos = float(jnp.sum(y * ref_y) /
+                    (jnp.linalg.norm(y) * jnp.linalg.norm(ref_y)))
+        assert cos > 0.85, cos
+
+    def test_ops_cim_matmul_matches_core(self):
+        from repro.core import cim as cim_core
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (6, 64))
+        w = 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (64, 24))
+        got = ops.cim_matmul(x, w, interpret=True, bm=8, bn=8, bk=16)
+        # core path quantizes per-tensor; ops path per-tensor too for plain w
+        want = cim_core.cim_matmul(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)

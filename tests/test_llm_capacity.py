@@ -1,0 +1,41 @@
+"""llm_capacity benchmark helpers: LayerSpec derivation consistency."""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import pytest
+
+from benchmarks.llm_capacity import lm_layer_specs
+from repro import configs
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "qwen3-14b",
+                                  "mixtral-8x7b", "kimi-k2-1t-a32b",
+                                  "whisper-large-v3"])
+def test_layer_specs_match_param_count(arch):
+    """The energy model's LayerSpecs must account for (almost) all of the
+    model's parameters — within 15% of the ParamDef ground truth (norms,
+    embed table, ssm/conv oddments are excluded by design)."""
+    cfg = configs.get(arch)
+    spec_params = sum(l.params() for l in lm_layer_specs(cfg))
+    true_params = cfg.param_count()
+    # embed table excluded from specs; compare against matmul-ish params
+    ratio = spec_params / true_params
+    assert 0.6 < ratio < 1.15, (arch, ratio)
+
+
+def test_moe_macs_use_active_fraction():
+    cfg = configs.get("kimi-k2-1t-a32b")
+    specs = lm_layer_specs(cfg, batch=1)
+    expert_macs = sum(l.macs() for l in specs if "moe" in l.name)
+    expert_params = sum(l.params() for l in specs if "moe" in l.name)
+    frac = cfg.experts_per_token / cfg.num_experts
+    assert expert_macs == pytest.approx(expert_params * frac, rel=1e-6)
+
+
+def test_batch_scales_dense_macs_linearly():
+    cfg = configs.get("glm4-9b")
+    m1 = sum(l.macs() for l in lm_layer_specs(cfg, 1))
+    m8 = sum(l.macs() for l in lm_layer_specs(cfg, 8))
+    assert m8 == pytest.approx(8 * m1, rel=1e-6)

@@ -1,0 +1,68 @@
+"""Multi-device SPMD correctness on fake CPU devices (subprocess — the
+device count must be set before jax initializes, which pytest's process
+has already done)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.data import DataConfig, batch_for
+from repro.dist import mesh as mesh_lib, sharding as shd
+from repro.models import registry
+from repro.optim import adamw
+from repro.train.step import init_state, make_train_step
+
+cfg = configs.smoke("internlm2-1.8b")
+model = registry.build(cfg)
+dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
+batch = batch_for(cfg, dc, jnp.asarray(0))
+opt = adamw(1e-3)
+
+# 1-device reference
+state = init_state(model, opt, jax.random.key(0))
+step1 = jax.jit(make_train_step(model, opt))
+ref_state, ref_m = step1(state, batch)
+
+# 8-device (2 data x 4 model) sharded
+mesh = mesh_lib.make_mesh(mesh_lib.MeshSpec((2, 4), ("data", "model")))
+rules = shd.rules_for(cfg, "train")
+shd.set_activation_context(rules, mesh)
+state = init_state(model, opt, jax.random.key(0))
+stepN = jax.jit(make_train_step(model, opt, rules=rules, mesh=mesh))
+got_state, got_m = stepN(state, batch)
+
+diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+           for a, b in zip(jax.tree.leaves(ref_state.params),
+                           jax.tree.leaves(got_state.params)))
+# HLO must contain collectives when sharded
+txt = stepN.lower(state, batch).compile().as_text()
+print(json.dumps({
+    "loss_ref": float(ref_m["loss"]), "loss_got": float(got_m["loss"]),
+    "max_param_diff": diff,
+    "has_collectives": ("all-reduce" in txt) or ("all-gather" in txt),
+    "devices": jax.device_count(),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_step_matches_single_device(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert abs(out["loss_ref"] - out["loss_got"]) < 1e-3
+    assert out["max_param_diff"] < 5e-2          # bf16 reduction-order noise
+    assert out["has_collectives"]

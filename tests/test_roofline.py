@@ -1,0 +1,117 @@
+"""Roofline machinery: HLO parser vs XLA ground truth, loop awareness,
+collective wire formulas, report plumbing."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline import analyze_compiled, collective_bytes, model_flops
+from repro.roofline.hlo_cost import analyze_text, parse_module
+
+W = jnp.ones((128, 128), jnp.float32)
+
+
+def test_loop_free_matches_xla():
+    def f(x):
+        return (x @ W).sum()
+    x = jnp.ones((128, 128), jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    mine = analyze_text(c.as_text(), 1)
+    assert abs(mine.flops - ca["flops"]) / ca["flops"] < 0.05
+    assert abs(mine.bytes - ca["bytes accessed"]) / ca["bytes accessed"] < 0.3
+
+
+def test_scan_multiplies_by_trip_count():
+    def body(x, _):
+        return x @ W, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y.sum()
+    x = jnp.ones((128, 128), jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    mine = analyze_text(c.as_text(), 1)
+    one_matmul = 2 * 128**3
+    assert mine.flops == pytest.approx(12 * one_matmul, rel=0.05)
+    assert mine.unknown_trips == 0
+
+
+def test_nested_scan():
+    def inner(x, _):
+        return x @ W, None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(inner, x, None, length=3)
+        return y, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+    x = jnp.ones((128, 128), jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    mine = analyze_text(c.as_text(), 1)
+    assert mine.flops == pytest.approx(15 * 2 * 128**3, rel=0.05)
+
+
+SYNTH_HLO = """
+HloModule test
+
+ENTRY %main (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %ag = f32[64,64]{1,0} all-gather(%p0), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}
+  %ar = f32[64,64]{1,0} all-reduce(%ag), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%add
+  %rs = f32[8,64]{1,0} reduce-scatter(%ar), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}
+  %cp = f32[8,64]{1,0} collective-permute(%rs), channel_id=4, source_target_pairs={{0,1}}
+  ROOT %out = f32[64,64]{1,0} all-gather(%cp), channel_id=5, replica_groups=[1,8]<=[8], dimensions={0}
+}
+"""
+
+
+def test_collective_wire_formulas():
+    cost = analyze_text(SYNTH_HLO, 8)
+    sz = 64 * 64 * 4
+    shard = 8 * 64 * 4
+    assert cost.coll_by_kind["all-reduce"] == pytest.approx(2 * sz * 7 / 8)
+    # two all-gathers: group of 4 and group of 8
+    assert cost.coll_by_kind["all-gather"] == pytest.approx(
+        sz * 3 / 4 + sz * 7 / 8)
+    assert cost.coll_by_kind["reduce-scatter"] == pytest.approx(shard * 7)
+    assert cost.coll_by_kind["collective-permute"] == pytest.approx(shard)
+
+
+def test_analyze_compiled_report():
+    from repro import configs
+
+    def f(x):
+        return (x @ W).sum()
+    x = jnp.ones((128, 128), jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    cfg = configs.smoke("internlm2-1.8b")
+    r = analyze_compiled(c, arch="t", shape="s", mesh_name="1", chips=1,
+                         cfg=cfg, tokens=1024, kind="train")
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert r.t_compute > 0 and r.t_memory > 0
+    assert r.model_flops_total == pytest.approx(
+        6 * cfg.param_count() * 1024)
+    assert "|" in r.row()
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro import configs
+    cfg = configs.get("mixtral-8x7b")
+    mf = model_flops(cfg, 1000, "train")
+    assert mf < 6 * cfg.param_count() * 1000
+    assert mf == pytest.approx(6 * cfg.active_param_count() * 1000)
+
+
+def test_dus_counts_slice_not_buffer():
+    def f(x, buf):
+        return jax.lax.dynamic_update_slice(buf, x[None], (3, 0, 0))
+    x = jnp.ones((64, 64), jnp.float32)
+    buf = jnp.zeros((100, 64, 64), jnp.float32)
+    # donate buf so the in-place DUS needs no defensive copy
+    c = jax.jit(f, donate_argnums=(1,)).lower(x, buf).compile()
+    mine = analyze_text(c.as_text(), 1)
+    # traffic ~ 2x the 64x64 update, NOT the 100x64x64 buffer
+    assert mine.bytes < 10 * 64 * 64 * 4

@@ -1,0 +1,104 @@
+"""Sharding rules: divisibility, no axis reuse, quantum units, spec trees."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import mesh as mesh_lib
+from repro.dist import sharding as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh for rule resolution without real devices."""
+    def __init__(self, shape, names):
+        import numpy as np
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def spec(axes, shape, rules=None, mesh=MESH):
+    return shd.logical_to_spec(axes, shape, rules or shd.train_rules(), mesh)
+
+
+def test_basic_tp_sharding():
+    assert spec(("embed", "mlp"), (4096, 14336)) == P("data", "model")
+
+
+def test_divisibility_blocks_sharding():
+    # 100 not divisible by 16 -> replicated
+    assert spec(("embed", "mlp"), (100, 14336)) == P(None, "model")
+
+
+def test_no_axis_reuse():
+    # embed takes 'data'; a second dim asking for data gets None
+    r = shd.train_rules().with_overrides(mlp=("data",))
+    assert spec(("embed", "mlp"), (4096, 4096), r) == P("data")
+
+
+def test_quantum_prevents_head_splitting():
+    # kv dim = 2 heads x 128 = 256: divisible by 16 raw, but only 2 units
+    r = shd.train_rules(quantum={"kv": 128})
+    assert spec(("embed_rp", "kv"), (4096, 256), r) == P("model")
+    # 16 heads x 128 -> shardable
+    r2 = shd.train_rules(quantum={"heads": 128})
+    assert spec(("embed", "heads"), (4096, 2048), r2) == P("data", "model")
+
+
+def test_batch_uses_pod_and_data():
+    s = spec(("batch", "seq"), (256, 4096), mesh=POD)
+    assert s == P(("pod", "data"))
+
+
+def test_batch_of_one_replicates():
+    assert spec(("batch", "seq"), (1, 524288), mesh=POD) == P()
+
+
+def test_serve_rules_shard_cache_seq():
+    r = shd.serve_rules()
+    s = shd.logical_to_spec(("layers", "batch", "cache_seq", "kv", "none"),
+                            (40, 128, 32768, 8, 128), r, MESH)
+    assert s == P(None, "data", "model")
+
+
+def test_fsdp_off_replicates_embed():
+    r = shd.train_rules(fsdp=False)
+    assert spec(("embed", "mlp"), (4096, 14336), r) == P(None, "model")
+
+
+def test_spec_tree_on_model_defs():
+    from repro import configs
+    from repro.models import registry
+    model = registry.build(configs.get("internlm2-1.8b"))     # 16 heads
+    tree = shd.spec_tree(model.param_defs, shd.rules_for(
+        configs.get("internlm2-1.8b"), "train"), MESH)
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(l, P) for l in leaves)
+    # attention q-proj must be TP-sharded (16 heads / 16-way model axis)
+    blocks = tree["blocks"]
+    assert "model" in jax.tree.leaves(
+        blocks["wq"], is_leaf=lambda x: isinstance(x, P))[0]
+
+
+def test_qwen3_heads_not_divisible_stay_whole():
+    """40 heads on a 16-way TP axis: quantum forbids mid-head splits, so
+    the q projection replicates (recorded honestly in the roofline)."""
+    from repro import configs
+    cfg = configs.get("qwen3-14b")
+    r = shd.rules_for(cfg, "train")
+    s = shd.logical_to_spec(("layers", "embed", "heads"),
+                            (40, 5120, 40 * 128), r, MESH)
+    assert s == P(None, "data")
+
+
+def test_mesh_spec_helpers():
+    assert mesh_lib.SINGLE_POD.num_devices == 256
+    assert mesh_lib.MULTI_POD.num_devices == 512
+    assert mesh_lib.MULTI_POD.dp_axes == ("pod", "data")
+    s = mesh_lib.spec_for(8)
+    assert s.num_devices == 8
+    s = mesh_lib.spec_for(8, multi_pod=True)
+    assert s.num_devices == 8 and "pod" in s.axes

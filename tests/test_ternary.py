@@ -1,0 +1,113 @@
+"""Unit + property tests for the balanced-ternary codec and quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import packing, ternary
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestCodec:
+    def test_trit_range(self):
+        assert ternary.trit_range(5) == 121
+        assert ternary.trit_range(1) == 1
+        assert ternary.trit_range(3) == 13
+
+    def test_roundtrip_exhaustive_5t(self):
+        vals = jnp.arange(-121, 122)
+        trits = ternary.to_balanced_ternary(vals, 5)
+        assert trits.shape == (5, 243)
+        assert set(np.unique(np.asarray(trits))) <= {-1, 0, 1}
+        back = ternary.from_balanced_ternary(trits)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(vals))
+
+    def test_clipping(self):
+        vals = jnp.array([127, -128, 500])
+        back = ternary.from_balanced_ternary(ternary.to_balanced_ternary(vals, 5))
+        np.testing.assert_array_equal(np.asarray(back), [121, -121, 121])
+
+    @given(st.lists(st.integers(-121, 121), min_size=1, max_size=64),
+           st.integers(1, 5))
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_property(self, vals, q):
+        lim = ternary.trit_range(q)
+        arr = jnp.array(vals)
+        back = ternary.from_balanced_ternary(ternary.to_balanced_ternary(arr, q))
+        np.testing.assert_array_equal(np.asarray(back),
+                                      np.clip(vals, -lim, lim))
+
+
+class TestSignals:
+    def test_table1_weights(self):
+        trits = jnp.array([1, 0, -1])
+        q1, q2 = ternary.weight_signals(trits)
+        np.testing.assert_array_equal(np.asarray(q1), [0, 1, 1])
+        np.testing.assert_array_equal(np.asarray(q2), [0, 0, 1])
+        back = ternary.signals_to_weight_trit(q1, q2)
+        np.testing.assert_array_equal(np.asarray(back), [1, 0, -1])
+
+    def test_table1_inputs(self):
+        trits = jnp.array([1, 0, -1])
+        in1, in2 = ternary.input_signals(trits)
+        np.testing.assert_array_equal(np.asarray(in1), [1, 1, 0])
+        np.testing.assert_array_equal(np.asarray(in2), [1, 0, 0])
+
+
+class TestQuantization:
+    def test_truncate_matches_8b_for_small_weights(self):
+        # NN-like weights (small) -> truncation changes nothing vs 8b
+        key = jax.random.PRNGKey(0)
+        w = 0.02 * jax.random.normal(key, (256, 64))
+        q8 = ternary.quantize_8b(w)
+        qt = ternary.quantize_8b_truncate_5t(w)
+        frac_clipped = np.mean(np.asarray(q8.values != qt.values))
+        assert frac_clipped < 0.02  # only the rare |q|>121 tail clips
+
+    def test_dequant_error_bounded(self):
+        key = jax.random.PRNGKey(1)
+        w = jax.random.normal(key, (128, 128))
+        tt = ternary.ternarize(w, 5)
+        err = jnp.abs(tt.dequantize() - w).max()
+        # worst case: |q8|=127 clipped to 121 plus rounding -> 6.5 * scale
+        assert float(err) <= float(tt.scale) * 6.5 + 1e-6
+
+    def test_ternarize_planes_valid(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (32, 32))
+        tt = ternary.ternarize(w, 5)
+        assert tt.trits.shape == (5, 32, 32)
+        assert set(np.unique(np.asarray(tt.trits))) <= {-1, 0, 1}
+
+
+class TestPacking:
+    @given(st.integers(0, 10_000), st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_trit2_roundtrip(self, seed, qdummy):
+        key = jax.random.PRNGKey(seed)
+        trits = jax.random.randint(key, (16, 8), -1, 2, dtype=jnp.int8)
+        packed = packing.pack_trits2(trits)
+        assert packed.shape == (4, 8) and packed.dtype == jnp.uint8
+        back = packing.unpack_trits2(packed)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(trits))
+
+    def test_base3_roundtrip(self):
+        vals = jnp.arange(-121, 122)
+        packed = packing.pack_base3(vals)
+        assert packed.dtype == jnp.uint8
+        back = packing.unpack_base3(packed)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(vals))
+
+    def test_base3_is_one_byte_per_weight(self):
+        assert packing.packed_bytes((128, 256), "base3") == 128 * 256
+        assert packing.packed_bytes((128, 256), "bf16") == 2 * 128 * 256
+        assert packing.packed_bytes((128, 256), "trit2", num_trits=1) == 128 * 256 // 4
+
+    def test_planes_base3_consistency(self):
+        vals = jnp.arange(-121, 122)
+        trits = ternary.to_balanced_ternary(vals, 5)
+        packed = packing.pack_trit_planes_base3(trits)
+        planes = packing.unpack_base3_to_planes(packed, 5)
+        np.testing.assert_array_equal(np.asarray(planes), np.asarray(trits))

@@ -1,0 +1,23 @@
+# Tier-1 verification. The multi-device tests (test_multidevice,
+# test_elastic) spawn subprocesses that force 8 fake CPU devices via
+# XLA_FLAGS before jax initializes; exporting the flag here too keeps
+# the top-level process consistent on CPU-only hosts and makes the run
+# reproducible regardless of the caller's environment.
+XLA_DEVICES ?= 8
+
+.PHONY: verify test test-fast dryrun-smoke
+
+verify: test
+
+test:
+	XLA_DEVICES=$(XLA_DEVICES) scripts/verify.sh
+
+# skip the multi-minute subprocess tests (inner loop)
+test-fast:
+	python -m pytest -x -q -m "not slow"
+
+# one dry-run cell as a launcher smoke check (compiles a 256-chip train
+# step against ShapeDtypeStructs; no allocation)
+dryrun-smoke:
+	PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+	    --shape train_4k

@@ -1,0 +1,8 @@
+#!/usr/bin/env sh
+# Tier-1 verify wrapper: reproducible on CPU-only hosts with no network.
+# The sharded subprocess tests need >= 8 (fake) devices; pytest.ini puts
+# src/ and tests/ on sys.path.
+set -eu
+cd "$(dirname "$0")/.."
+XLA_FLAGS="--xla_force_host_platform_device_count=${XLA_DEVICES:-8}" \
+    exec python -m pytest -x -q "$@"

@@ -1,0 +1,240 @@
+"""Logical-axis sharding rules: names -> PartitionSpecs.
+
+Every parameter and activation in the codebase carries *logical* axis
+names (ParamDef.axes, the constrain_act call sites).  This module owns
+the single mapping from those names to physical mesh axes, so a whole
+parallelism strategy is one Rules object — FSDP off, expert parallelism
+over 'data', sequence parallelism, pure-DP small models are all
+``with_overrides`` one-liners (see launch/dryrun.py).
+
+Resolution invariants (enforced by logical_to_spec, tested in
+tests/test_sharding.py):
+
+* **divisibility** — a dim only shards if its size divides evenly over
+  the target mesh axes; otherwise it silently replicates (recorded
+  honestly by the roofline, never padded).
+* **no axis reuse** — one physical axis shards at most one dim of a
+  given array (left-to-right, first dim wins).
+* **quantum units** — dims made of indivisible units (attention heads:
+  quantum = head_dim) shard by the *unit count*, so a 16-way TP axis
+  never splits mid-head (40-head qwen3 replicates instead).
+* **batch folding** — 'batch' maps to the tuple of data-parallel axes
+  present in the mesh (('pod', 'data') on the multi-pod mesh); trailing
+  axes are dropped until the batch divides, so a batch of 1 replicates.
+* **zero-size dims** never shard (elastic edge case: empty buffers).
+
+``set_activation_context`` installs the (rules, mesh) pair that
+``constrain_act`` — called from dense()/attention on every activation —
+resolves against; with no context it is a no-op, which is what keeps
+the single-device smoke tests sharding-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import mesh as mesh_lib
+
+
+class UnknownLogicalAxisError(KeyError):
+    """A ParamDef / constraint names a logical axis no rule covers."""
+
+
+# ---------------------------------------------------------------------
+# rule sets
+# ---------------------------------------------------------------------
+
+# Default logical->physical mapping for training.  Values are a physical
+# axis name, a tuple of names (folded jointly, trailing ones dropped on
+# divisibility failure), or None (replicate).
+_TRAIN_AXES = {
+    # activations
+    "batch": mesh_lib.DP_AXES,
+    "seq": None,
+    "kv_seq": None,
+    "head_count": "model",
+    "act_embed": None,
+    # parameters
+    "layers": None,
+    "embed": "data",            # FSDP: weights reduce-scattered over DP
+    "embed_rp": "model",        # row-parallel contraction (kv projections)
+    "vocab": "model",           # unembed: column-parallel TP
+    "vocab_in": None,           # lookup table: vocab dim never sharded
+    "mlp": "model",
+    "heads": "model",
+    "kv": "model",
+    "inner": "model",           # SSM expanded dim
+    "expert": "model",
+    "cache_seq": None,
+    "none": None,
+}
+
+# Serving additionally shards the KV-cache sequence dim over the TP axis
+# (decode is cache-bandwidth bound; each chip reads cap/16 positions) and
+# anchors cache reads ('kv_seq') to match.
+_SERVE_AXES = {**_TRAIN_AXES, "cache_seq": "model", "kv_seq": "model"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Immutable logical->physical axis mapping + sharding quanta."""
+    axis_map: Any                      # dict[str, str | tuple | None]
+    quantum: Any = None                # dict[str, int] — unit sizes
+
+    def physical(self, name: str):
+        try:
+            return self.axis_map[name]
+        except KeyError:
+            raise UnknownLogicalAxisError(
+                f"no sharding rule for logical axis {name!r}; known axes: "
+                f"{sorted(self.axis_map)}") from None
+
+    def with_overrides(self, **overrides) -> "Rules":
+        """New Rules with some logical axes remapped (None = replicate)."""
+        return Rules({**self.axis_map, **overrides}, dict(self.quantum or {}))
+
+    def with_quantum(self, **units) -> "Rules":
+        return Rules(dict(self.axis_map), {**(self.quantum or {}), **units})
+
+
+def train_rules(fsdp: bool = True, quantum: Optional[dict] = None) -> Rules:
+    axes = dict(_TRAIN_AXES)
+    if not fsdp:
+        axes["embed"] = None
+    return Rules(axes, dict(quantum or {}))
+
+
+def serve_rules(fsdp: bool = True, quantum: Optional[dict] = None) -> Rules:
+    axes = dict(_SERVE_AXES)
+    if not fsdp:
+        axes["embed"] = None
+    return Rules(axes, dict(quantum or {}))
+
+
+def rules_for(cfg, mode: str, fsdp: bool = True) -> Rules:
+    """Rules for a ModelConfig: head-bearing dims get quantum = head_dim
+    so TP never splits inside a head (GQA kv groups included)."""
+    quantum = {"heads": cfg.hd, "kv": cfg.hd}
+    if mode == "train":
+        return train_rules(fsdp=fsdp, quantum=quantum)
+    if mode == "serve":
+        return serve_rules(fsdp=fsdp, quantum=quantum)
+    raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
+
+
+# ---------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------
+
+def _resolve_dim(candidate, dim: int, name: str, sizes: dict, used: set,
+                 quantum: dict):
+    """One dim -> PartitionSpec entry (axis name, tuple, or None)."""
+    if candidate is None or dim == 0:
+        return None
+    axes = (candidate,) if isinstance(candidate, str) else tuple(candidate)
+    axes = tuple(a for a in axes if a in sizes and a not in used)
+    if not axes:
+        return None
+    q = (quantum or {}).get(name, 1)
+    if q > 1 and dim % q:
+        return None                      # partial unit: cannot shard at all
+    units = dim // q
+    # drop trailing axes until the unit count divides the fold product
+    while axes:
+        prod = math.prod(sizes[a] for a in axes)
+        if units % prod == 0:
+            break
+        axes = axes[:-1]
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def logical_to_spec(axes: tuple, shape: tuple, rules: Rules,
+                    mesh) -> P:
+    """Resolve logical axes against a mesh into a PartitionSpec.
+
+    `mesh` may be a real Mesh, a MeshSpec, or anything with .axis_names
+    + .devices.  Trailing replicated dims are trimmed (P('data') rather
+    than P('data', None)) so specs compare naturally in tests and stay
+    rank-compatible with scalar/low-rank leaves.
+    """
+    if len(axes) != len(shape):
+        raise ValueError(
+            f"axes {axes} and shape {shape} disagree on rank")
+    sizes = mesh_lib.axis_sizes(mesh)
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        entry = _resolve_dim(rules.physical(name), dim, name, sizes, used,
+                             rules.quantum)
+        if entry is not None:
+            used.update((entry,) if isinstance(entry, str) else entry)
+        entries.append(entry)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def spec_tree(defs: Any, rules: Rules, mesh) -> Any:
+    """ParamDef tree -> PartitionSpec tree (same structure)."""
+    from repro.models.config import is_def
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.axes, d.shape, rules, mesh), defs,
+        is_leaf=is_def)
+
+
+def named_sharding(axes: tuple, shape: tuple, rules: Rules,
+                   mesh) -> NamedSharding:
+    """NamedSharding for one array (requires a real Mesh)."""
+    return NamedSharding(mesh, logical_to_spec(axes, shape, rules, mesh))
+
+
+# ---------------------------------------------------------------------
+# activation constraints
+# ---------------------------------------------------------------------
+
+def constrain(x, axes: tuple, rules: Optional[Rules], mesh):
+    """with_sharding_constraint through the rule engine (no-op off-mesh)."""
+    if rules is None or mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(axes, x.shape, rules, mesh))
+
+
+# Module-level activation context: model code (dense(), attention) calls
+# constrain_act without threading rules/mesh through every signature;
+# make_train_step / the dry-run install the context before tracing.
+_ACT_CTX = threading.local()
+
+
+def set_activation_context(rules: Optional[Rules], mesh) -> None:
+    """Install (rules, mesh) for constrain_act; either None clears it."""
+    if rules is None or mesh is None:
+        _ACT_CTX.value = None
+    else:
+        _ACT_CTX.value = (rules, mesh)
+
+
+def get_activation_context():
+    return getattr(_ACT_CTX, "value", None)
+
+
+def constrain_act(x, axes: Optional[tuple] = None):
+    """Re-anchor an activation's sharding (no-op without a context).
+
+    Default axes assume (batch, seq, *feature) layout with features
+    replicated — the layout of every residual-stream activation.
+    """
+    ctx = get_activation_context()
+    if ctx is None or x.ndim < 2:
+        return x
+    rules, mesh = ctx
+    if axes is None:
+        axes = ("batch", "seq") + ("none",) * (x.ndim - 2)
+    return constrain(x, axes, rules, mesh)

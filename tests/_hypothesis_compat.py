@@ -1,0 +1,141 @@
+"""Offline fallback for `hypothesis`: deterministic sampled `given`.
+
+The property tests prefer the real hypothesis package (shrinking, edge
+cases, example database).  On network-less CI images where it is not
+installed, this shim keeps them *running* instead of failing at
+collection: `given` draws `max_examples` pseudo-random samples from each
+strategy with a seed derived from the test name, so failures reproduce
+across runs and machines.
+
+Only the API surface the test suite uses is implemented: given,
+settings (decorator + register_profile/load_profile),
+strategies.{integers, floats, lists, sampled_from} and Strategy.filter.
+
+Usage (at the top of a test module):
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:                         # offline image
+        from _hypothesis_compat import given, settings
+        from _hypothesis_compat import strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class Unsatisfiable(Exception):
+    """A .filter() predicate rejected every draw attempt."""
+
+
+class Strategy:
+    def __init__(self, draw_fn, describe: str = "strategy"):
+        self._draw = draw_fn
+        self._describe = describe
+
+    def __repr__(self):
+        return f"<{self._describe}>"
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def filter(self, predicate) -> "Strategy":
+        def draw(rng, _base=self._draw):
+            for _ in range(1000):
+                v = _base(rng)
+                if predicate(v):
+                    return v
+            raise Unsatisfiable(
+                f"{self!r}.filter rejected 1000 consecutive draws")
+        return Strategy(draw, f"{self._describe}.filter")
+
+    def map(self, fn) -> "Strategy":
+        return Strategy(lambda rng, _b=self._draw: fn(_b(rng)),
+                        f"{self._describe}.map")
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies`."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value),
+                        f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        return Strategy(lambda rng: rng.uniform(min_value, max_value),
+                        f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: rng.choice(elements),
+                        f"sampled_from({elements!r:.40s})")
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return Strategy(draw, f"lists({elements!r}, {min_size}, {max_size})")
+
+class settings:
+    """Decorator recording per-test overrides + profile store."""
+    _profiles: dict = {"default": {"max_examples": 50}}
+    _active: dict = _profiles["default"]
+
+    def __init__(self, max_examples: int | None = None, deadline=None,
+                 **_ignored):
+        self._overrides = {}
+        if max_examples is not None:
+            self._overrides["max_examples"] = max_examples
+
+    def __call__(self, fn):
+        fn._hypothesis_compat_settings = self._overrides
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int | None = None,
+                         deadline=None, **_ignored):
+        cls._profiles[name] = ({"max_examples": max_examples}
+                               if max_examples is not None else {})
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._active = {**cls._profiles["default"], **cls._profiles[name]}
+
+
+def given(*strats: Strategy):
+    """Run the test once per example with deterministically drawn args."""
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit inside @given (attribute on fn) or outside
+            # it (attribute on this wrapper) — real hypothesis allows both.
+            cfg = {**settings._active,
+                   **getattr(fn, "_hypothesis_compat_settings", {}),
+                   **wrapper.__dict__.get("_hypothesis_compat_settings", {})}
+            n = cfg.get("max_examples") or 50
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(seed0 + i)
+                vals = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i}): "
+                        f"{fn.__name__}{tuple(vals)!r}") from e
+        # hide the original signature: pytest must not resolve the
+        # strategy-bound parameters as fixtures (real hypothesis does the
+        # same).  `self` is supplied by bound-method dispatch, not by name.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorate

@@ -1,0 +1,10 @@
+import numpy as np
+
+
+class FakeMesh:
+    """Duck-typed mesh (axis_names + devices) for rule resolution in
+    tests without real devices — the contract dist.mesh.axis_sizes
+    accepts."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)

@@ -1,0 +1,115 @@
+"""repro.dist edge cases beyond the seed contract: degenerate shapes,
+unknown logical axes, awkward device counts, context lifecycle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import FakeMesh
+from repro.dist import mesh as mesh_lib
+from repro.dist import sharding as shd
+from repro.models.config import ParamDef
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+def test_zero_size_dim_replicates():
+    # empty buffers (elastic scale-to-zero shards) must not claim axes
+    assert shd.logical_to_spec(("embed", "mlp"), (0, 14336),
+                               shd.train_rules(), MESH) == P(None, "model")
+    assert shd.logical_to_spec(("mlp",), (0,), shd.train_rules(),
+                               MESH) == P()
+
+
+def test_one_dim_param():
+    # 1-d norm scale: FSDP shards it over data when divisible
+    assert shd.logical_to_spec(("embed",), (4096,), shd.train_rules(),
+                               MESH) == P("data")
+    assert shd.logical_to_spec(("embed",), (100,), shd.train_rules(),
+                               MESH) == P()
+
+
+def test_scalar_param():
+    assert shd.logical_to_spec((), (), shd.train_rules(), MESH) == P()
+
+
+def test_unknown_logical_axis_raises():
+    with pytest.raises(shd.UnknownLogicalAxisError, match="warp_drive"):
+        shd.logical_to_spec(("warp_drive",), (64,), shd.train_rules(), MESH)
+    with pytest.raises(KeyError):          # it is also a KeyError
+        shd.logical_to_spec(("batch", "typo"), (8, 8), shd.serve_rules(),
+                            MESH)
+
+
+def test_rank_mismatch_raises():
+    with pytest.raises(ValueError, match="rank"):
+        shd.logical_to_spec(("embed",), (8, 8), shd.train_rules(), MESH)
+
+
+def test_quantum_partial_unit_blocks():
+    # dim not divisible by the quantum itself: never sharded
+    r = shd.train_rules(quantum={"heads": 128})
+    assert shd.logical_to_spec(("heads",), (2048 + 64,), r, MESH) == P()
+
+
+@pytest.mark.parametrize("n", [1, 3, 6, 8, 12, 48, 100, 256])
+def test_spec_for_arbitrary_counts(n):
+    s = mesh_lib.spec_for(n)
+    assert s.num_devices == n
+    assert s.axes == ("data", "model")
+    sm = mesh_lib.spec_for(n, multi_pod=True)
+    assert sm.num_devices == n
+    assert "pod" in sm.axes
+
+
+def test_spec_for_256_matches_single_pod():
+    assert mesh_lib.spec_for(256).shape == mesh_lib.SINGLE_POD.shape
+
+
+def test_spec_for_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        mesh_lib.spec_for(0)
+
+
+def test_with_overrides_does_not_mutate():
+    base = shd.train_rules()
+    base.with_overrides(mlp=None, seq="model")
+    assert base.physical("mlp") == "model"
+    assert base.physical("seq") is None
+
+
+def test_spec_tree_handles_nested_defs():
+    defs = {"a": ParamDef((4096, 14336), ("embed", "mlp")),
+            "nested": {"b": ParamDef((), (), "zeros", jnp.int32)}}
+    tree = shd.spec_tree(defs, shd.train_rules(), MESH)
+    assert tree["a"] == P("data", "model")
+    assert tree["nested"]["b"] == P()
+
+
+def test_constrain_act_noop_without_context():
+    shd.set_activation_context(None, None)
+    x = jnp.ones((2, 8, 16))
+    assert shd.constrain_act(x) is x
+
+
+def test_constrain_act_applies_on_real_mesh():
+    # 1-device mesh: the constraint must at least round-trip values
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = jax.sharding.Mesh(dev, ("data", "model"))
+    rules = shd.train_rules()
+    try:
+        shd.set_activation_context(rules, mesh)
+        x = jnp.arange(2 * 4 * 8, dtype=jnp.float32).reshape(2, 4, 8)
+        y = jax.jit(lambda a: shd.constrain_act(a) * 2)(x)
+        assert jnp.array_equal(y, x * 2)
+    finally:
+        shd.set_activation_context(None, None)
+
+
+def test_batch_partial_fold_uses_pod_only():
+    # batch divides the pod axis but not pod*data: folds over 'pod' alone
+    pod = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    s = shd.logical_to_spec(("batch", "seq"), (2, 128), shd.train_rules(),
+                            pod)
+    assert s == P("pod")

@@ -4,17 +4,9 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from conftest import FakeMesh
 from repro.dist import mesh as mesh_lib
 from repro.dist import sharding as shd
-
-
-class FakeMesh:
-    """Duck-typed mesh for rule resolution without real devices."""
-    def __init__(self, shape, names):
-        import numpy as np
-        self.axis_names = names
-        self.devices = np.empty(shape, dtype=object)
-
 
 MESH = FakeMesh((16, 16), ("data", "model"))
 POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))

@@ -5,7 +5,7 @@
 # reproducible regardless of the caller's environment.
 XLA_DEVICES ?= 8
 
-.PHONY: verify test test-fast dryrun-smoke
+.PHONY: verify test test-fast dryrun-smoke bench
 
 verify: test
 
@@ -15,6 +15,16 @@ test:
 # skip the multi-minute subprocess tests (inner loop)
 test-fast:
 	python -m pytest -x -q -m "not slow"
+
+# perf-trajectory benchmarks (kernel_bench + wallclock, reduced sweeps)
+# under the same 8-fake-device env as the tests; fails if the tracked
+# BENCH_wallclock.json baseline or the regenerated (gitignored)
+# experiments/benchmarks/*.json copies are missing or schema-invalid
+# (benchmarks/schema.py). Only `python -m benchmarks.wallclock`
+# rewrites the tracked baseline.
+bench:
+	XLA_FLAGS="--xla_force_host_platform_device_count=$(XLA_DEVICES)" \
+	    PYTHONPATH=src python -m benchmarks.run --fast
 
 # one dry-run cell as a launcher smoke check (compiles a 256-chip train
 # step against ShapeDtypeStructs; no allocation)

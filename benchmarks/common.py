@@ -18,6 +18,7 @@ from repro.data import ClassTaskConfig, class_batch
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "benchmarks")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def save_json(name: str, payload: dict) -> str:
@@ -26,6 +27,39 @@ def save_json(name: str, payload: dict) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     return path
+
+
+def save_bench_json(name: str, payload: dict) -> str:
+    """Write a tracked perf-trajectory artifact (BENCH_<name>.json at the
+    repo root — the wall-clock numbers later perf PRs are judged against),
+    in addition to the experiments/ copy."""
+    save_json(name, payload)
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def stable_seed(*parts) -> int:
+    """PYTHONHASHSEED-independent seed from a tuple of ints/strings
+    (builtin hash() of str is salted per process — irreproducible)."""
+    import zlib
+    return zlib.crc32("|".join(map(str, parts)).encode()) % 2**31
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
+    """Median wall-clock seconds of fn(*args) with jit warmup and
+    block_until_ready on the result."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
 
 
 # ------------------------------------------------------------------ MLP

@@ -4,17 +4,23 @@ Each module reproduces one table/figure of TL-nvSRAM-CIM (DAC'23) and
 returns a dict with the measured values + per-claim pass booleans; the
 aggregate summary is printed at the end and written to
 experiments/benchmarks/summary.json.
+
+``--fast`` runs only the perf-trajectory suites (kernel_bench +
+wallclock, reduced sweeps) and then asserts the tracked JSON artifacts
+exist and are schema-valid — the `make bench` CI contract.
 """
 from __future__ import annotations
 
-import json
+import argparse
+import functools
+import os
 import sys
 import time
 
 from . import (accuracy_yield, adc_noise, capacity_density, cell_metrics,
                energy_efficiency, kernel_bench, llm_capacity, quantization,
-               restore_yield, roofline_table, throughput)
-from .common import save_json
+               restore_yield, roofline_table, schema, throughput, wallclock)
+from .common import OUT_DIR, REPO_ROOT, save_json
 
 SUITES = [
     ("quantization (Table 3)", quantization.run),
@@ -27,14 +33,46 @@ SUITES = [
     ("adc_noise (beyond-paper ablation)", adc_noise.run),
     ("llm_capacity (paper model @ assigned archs)", llm_capacity.run),
     ("kernel_bench (TPU adaptation)", kernel_bench.run),
+    # write_root=False: only a direct `python -m benchmarks.wallclock`
+    # rewrites the tracked BENCH_wallclock.json baseline
+    ("wallclock (decode fast lane)",
+     functools.partial(wallclock.run, write_root=False)),
     ("roofline_table (dry-run)", roofline_table.run),
 ]
 
+FAST_SUITES = [
+    ("kernel_bench (TPU adaptation)", kernel_bench.run),
+    ("wallclock (decode fast lane)",
+     functools.partial(wallclock.run, fast=True, write_root=False)),
+]
 
-def main() -> int:
+# artifacts `--fast` asserts after the run (schema name derives from the
+# BENCH_/.json filename inside schema.validate_file)
+FAST_ARTIFACTS = [
+    os.path.join(REPO_ROOT, "BENCH_wallclock.json"),
+    os.path.join(OUT_DIR, "wallclock.json"),
+    os.path.join(OUT_DIR, "kernel_bench.json"),
+]
+
+
+def check_artifacts() -> list[str]:
+    errors = []
+    for path in FAST_ARTIFACTS:
+        errors.extend(schema.validate_file(path))
+    return errors
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--fast", action="store_true",
+                   help="perf-trajectory suites only + artifact/schema "
+                        "check (the `make bench` contract)")
+    args = p.parse_args(argv)
+    suites = FAST_SUITES if args.fast else SUITES
+
     summary = {}
     failed = []
-    for name, fn in SUITES:
+    for name, fn in suites:
         print(f"== {name}")
         t0 = time.monotonic()
         try:
@@ -56,12 +94,23 @@ def main() -> int:
     print("=" * 64)
     total_claims = sum(len(s.get("claims", {})) for s in summary.values())
     bad_claims = sum(len(s.get("failed_claims", [])) for s in summary.values())
-    print(f"benchmarks: {len(SUITES)} suites, {total_claims} paper-claim "
+    print(f"benchmarks: {len(suites)} suites, {total_claims} paper-claim "
           f"checks, {bad_claims} outside band")
     for name, bad in failed:
         print(f"  !! {name}: {bad}")
-    save_json("summary", summary)
-    return 0
+    rc = 1 if failed else 0
+    if args.fast:
+        errors = check_artifacts()
+        if errors:
+            for e in errors:
+                print(f"  !! schema: {e}")
+            rc = 1
+        elif not failed:
+            print(f"artifacts OK: {', '.join(FAST_ARTIFACTS)}")
+        save_json("summary_fast", summary)
+    else:
+        save_json("summary", summary)
+    return rc
 
 
 if __name__ == "__main__":

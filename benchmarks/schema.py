@@ -1,0 +1,69 @@
+"""Schema contracts for the tracked benchmark JSON artifacts.
+
+`make bench` (and tests) validate the artifacts against these minimal
+required-key sets so a refactor cannot silently drop a field the perf
+trajectory depends on.  Keys here are a floor, not a ceiling — suites
+may add fields freely.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+# artifact name -> required top-level keys
+TOP_LEVEL = {
+    "wallclock": {
+        "backend", "platform", "shapes", "serve",
+        "min_decode_flop_waste_reduction",
+        "claim_waste_reduction_ge_8x",
+        "claim_device_loop_single_transfer",
+        "claim_loops_token_identical",
+    },
+    "kernel_bench": {
+        "sweep", "max_rel_err", "all_match_oracle",
+        "vmem_working_set_bytes", "hbm_density",
+    },
+}
+
+# wallclock per-shape-cell required keys
+WALLCLOCK_CELL = {
+    "phase", "m", "k", "n", "mode", "blocks_adaptive", "blocks_fixed",
+    "flops_ideal", "flops_padded_adaptive", "flops_padded_fixed",
+    "flop_waste_adaptive", "flop_waste_fixed", "flop_waste_reduction",
+    "hbm_bytes_adaptive", "hbm_bytes_fixed",
+}
+
+
+def validate(name: str, payload: dict) -> list[str]:
+    """Return a list of schema violations (empty = valid)."""
+    errors = []
+    required = TOP_LEVEL.get(name)
+    if required is None:
+        return errors                       # no contract for this artifact
+    if not isinstance(payload, dict):
+        return [f"{name}: top level is {type(payload).__name__}, not object"]
+    missing = required - payload.keys()
+    if missing:
+        errors.append(f"{name}: missing top-level keys {sorted(missing)}")
+    if name == "wallclock":
+        for i, cell in enumerate(payload.get("shapes", [])):
+            miss = WALLCLOCK_CELL - cell.keys()
+            if miss:
+                errors.append(f"wallclock shapes[{i}]: missing "
+                              f"{sorted(miss)}")
+        if not payload.get("shapes"):
+            errors.append("wallclock: empty shapes sweep")
+    return errors
+
+
+def validate_file(path: str) -> list[str]:
+    if not os.path.exists(path):
+        return [f"missing artifact: {path}"]
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except ValueError as e:                 # half-written/corrupt artifact
+        return [f"unparseable artifact {path}: {e}"]
+    name = os.path.basename(path)
+    name = name.removeprefix("BENCH_").removesuffix(".json")
+    return validate(name, payload)

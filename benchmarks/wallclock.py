@@ -1,0 +1,215 @@
+"""Wall-clock bench harness for the decode-path fast lane.
+
+Times prefill/decode matmul steps through the ternary kernels (xla
+backend on CPU hosts — Pallas interpret mode measures the interpreter,
+not the kernel; the pallas backend on real TPUs) and derives the
+*structural* waste metrics of the chosen BlockSpecs: padded-FLOP waste
+(MXU cycles spent on padding rows/cols) and HBM tile-traffic, for the
+shape-adaptive block selection vs the old fixed 128/128/512 tiles.
+
+Writes BENCH_wallclock.json at the repo root — the first point of the
+perf trajectory every later "measurably faster" claim is judged against
+(schema documented in ROADMAP.md §Performance).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ternary_matmul import (DEFAULT_BLOCKS, TRIT2_PER_BYTE,
+                                          _round_up, select_block_shapes)
+
+from .common import save_bench_json, stable_seed, time_fn
+
+# (M, K, N) — decode: token batches through a d_model x d_ff projection;
+# prefill: batch x seq rows through the same weight.
+DECODE_SHAPES = [(1, 1024, 1024), (4, 1024, 1024), (8, 1024, 1024),
+                 (16, 1024, 1024)]
+PREFILL_SHAPES = [(128, 1024, 1024), (256, 512, 1024)]
+MODES = ("base3", "trit2")
+
+
+def padded_flops(m: int, k: int, n: int, blocks) -> int:
+    """MAC-FLOPs the grid actually issues: every dim padded up to its
+    block multiple (the kernel zero-pads and the MXU multiplies zeros)."""
+    bm, bn, bk = blocks
+    return 2 * _round_up(m, bm) * _round_up(k, bk) * _round_up(n, bn)
+
+
+def hbm_tile_bytes(m: int, k: int, n: int, blocks, mode: str) -> int:
+    """HBM bytes the BlockSpecs move: x/w tiles per grid step + out/scale.
+    (x is re-streamed per N tile, w per M tile — the blocking cost model.)"""
+    bm, bn, bk = blocks
+    mt, nt, kt = (_round_up(m, bm) // bm, _round_up(n, bn) // bn,
+                  _round_up(k, bk) // bk)
+    x_tile = bm * bk * 4
+    w_tile = (bk // TRIT2_PER_BYTE if mode == "trit2" else bk) * bn
+    return (mt * nt * kt * (x_tile + w_tile)
+            + mt * nt * bm * bn * 4 + nt * bn * 4)
+
+
+def shape_cell(m: int, k: int, n: int, mode: str, phase: str,
+               backend: str, time_it: bool = True) -> dict:
+    adaptive = select_block_shapes(m, k, n, mode)
+    # the int8 lane tiles M in 32-row (int8 sublane) quanta, so its
+    # blocks — and waste — differ from the float lane's; record both so
+    # step_time_s_int8 is paired with the blocking it actually ran
+    adaptive_int8 = select_block_shapes(m, k, n, mode, domain="int8")
+    fixed = DEFAULT_BLOCKS
+    ideal = 2 * m * k * n
+    cell = {
+        "phase": phase, "m": m, "k": k, "n": n, "mode": mode,
+        "blocks_adaptive": list(adaptive), "blocks_fixed": list(fixed),
+        "blocks_adaptive_int8": list(adaptive_int8),
+        "flops_ideal": ideal,
+        "flops_padded_adaptive": padded_flops(m, k, n, adaptive),
+        "flops_padded_fixed": padded_flops(m, k, n, fixed),
+        "flops_padded_adaptive_int8": padded_flops(m, k, n, adaptive_int8),
+        "hbm_bytes_adaptive": hbm_tile_bytes(m, k, n, adaptive, mode),
+        "hbm_bytes_fixed": hbm_tile_bytes(m, k, n, fixed, mode),
+    }
+    cell["flop_waste_adaptive"] = cell["flops_padded_adaptive"] / ideal
+    cell["flop_waste_fixed"] = cell["flops_padded_fixed"] / ideal
+    cell["flop_waste_reduction"] = (cell["flops_padded_fixed"]
+                                    / cell["flops_padded_adaptive"])
+    cell["flop_waste_reduction_int8"] = (cell["flops_padded_fixed"]
+                                         / cell["flops_padded_adaptive_int8"])
+    cell["hbm_waste_reduction"] = (cell["hbm_bytes_fixed"]
+                                   / cell["hbm_bytes_adaptive"])
+    if time_it:
+        key = jax.random.key(stable_seed(m, k, n, mode))
+        kx, kw = jax.random.split(key)
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = 0.02 * jax.random.normal(kw, (k, n), jnp.float32)
+        pw = ops.pack_weights(w, mode)
+        # jit the whole step (a serving model runs these compiled):
+        # eager per-op dispatch would dominate the small decode shapes
+        # and make the baseline trivially beatable by adding jax.jit
+        step = jax.jit(functools.partial(ops.ternary_matmul,
+                                         backend=backend))
+        step_int8 = jax.jit(functools.partial(ops.ternary_matmul_int8,
+                                              backend=backend))
+        cell["step_time_s"] = time_fn(step, x, pw)
+        cell["step_time_s_int8"] = time_fn(step_int8, x, pw)
+    return cell
+
+
+def serve_loop_bench(max_new: int = 8, requests: int = 4,
+                     arch: str = "internlm2-1.8b") -> dict:
+    """Tokens/s + host-transfer counts of the on-device decode loop vs
+    the legacy per-step driver on the smoke model."""
+    import dataclasses
+    import time as _time
+
+    from repro import configs
+    from repro.models import registry
+    from repro.serve import Request, ServeEngine
+
+    cfg = dataclasses.replace(configs.smoke(arch), dtype=jnp.float32)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+
+    def run(on_device: bool) -> tuple[dict, dict]:
+        eng = ServeEngine(model, params, capacity=64, max_batch=requests,
+                          on_device_loop=on_device)
+
+        def submit():
+            for i in range(requests):
+                prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                            (8,), 0, cfg.vocab_size)
+                eng.submit(Request(uid=i, prompt=prompt, max_new=max_new))
+
+        submit()
+        eng.run()                     # warmup: prefill + decode-loop jit
+        base_tok, base_steps = eng.generated_tokens, eng.steps_run
+        base_tr = eng.host_transfers
+        submit()                      # timed pass runs warm executables
+        t0 = _time.perf_counter()
+        eng.run()
+        dt = _time.perf_counter() - t0
+        tokens = eng.generated_tokens - base_tok
+        stats = {"tok_per_s": round(tokens / max(dt, 1e-9), 1),
+                 "wall_s": round(dt, 3),
+                 "steps": eng.steps_run - base_steps,
+                 "host_transfers": eng.host_transfers - base_tr,
+                 "tokens": tokens}
+        return stats, {r.uid: list(r.out_tokens)
+                       for r in eng.completed[requests:]}
+
+    (device, device_out), (legacy, legacy_out) = run(True), run(False)
+    return {
+        "arch": arch, "requests": requests, "max_new": max_new,
+        "device_loop": device, "legacy_loop": legacy,
+        "buckets": 1,
+        "claim_device_loop_single_transfer":
+            device["host_transfers"] == 1,
+        # per-request token VALUES, not counts — a wrong token with an
+        # unchanged length must fail this claim
+        "tokens_identical": device_out == legacy_out,
+    }
+
+
+def run(verbose: bool = True, fast: bool = False,
+        write_root: bool | None = None) -> dict:
+    """write_root=True rewrites the tracked repo-root baseline
+    (BENCH_wallclock.json); default: only the full direct sweep
+    (``python -m benchmarks.wallclock``) does — benchmarks.run passes
+    False so neither suite mode touches the baseline."""
+    if write_root is None:
+        write_root = not fast
+    backend = "auto" if jax.default_backend() == "tpu" else "xla"
+    decode = DECODE_SHAPES[:2] if fast else DECODE_SHAPES
+    prefill = PREFILL_SHAPES[:1] if fast else PREFILL_SHAPES
+    shapes = []
+    for m, k, n in decode:
+        for mode in MODES:
+            shapes.append(shape_cell(m, k, n, mode, "decode", backend))
+    for m, k, n in prefill:
+        for mode in MODES:
+            shapes.append(shape_cell(m, k, n, mode, "prefill", backend))
+
+    decode_cells = [c for c in shapes if c["phase"] == "decode"
+                    and c["m"] <= 16]
+    min_reduction = min(c["flop_waste_reduction"] for c in decode_cells)
+    serve = serve_loop_bench(max_new=4 if fast else 8)
+
+    out = {
+        "backend": backend,
+        "platform": jax.default_backend(),
+        "fast": fast,
+        "shapes": shapes,
+        "serve": serve,
+        "min_decode_flop_waste_reduction": min_reduction,
+        "claim_waste_reduction_ge_8x": bool(min_reduction >= 8.0),
+        "claim_device_loop_single_transfer":
+            serve["claim_device_loop_single_transfer"],
+        "claim_loops_token_identical": serve["tokens_identical"],
+    }
+    if verbose:
+        print(f"  {len(shapes)} shape cells ({backend} backend); decode "
+              f"padded-FLOP waste reduction >= {min_reduction:.1f}x "
+              f"(claim >= 8x: {out['claim_waste_reduction_ge_8x']})")
+        d0 = decode_cells[0]
+        print(f"  e.g. M={d0['m']}: blocks {d0['blocks_fixed']} -> "
+              f"{d0['blocks_adaptive']}, waste {d0['flop_waste_fixed']:.0f}x"
+              f" -> {d0['flop_waste_adaptive']:.0f}x, step "
+              f"{d0.get('step_time_s', float('nan'))*1e3:.2f}ms")
+        print(f"  serve loop: device {serve['device_loop']['tok_per_s']} "
+              f"tok/s / {serve['device_loop']['host_transfers']} transfers"
+              f" vs legacy {serve['legacy_loop']['tok_per_s']} tok/s / "
+              f"{serve['legacy_loop']['host_transfers']} transfers "
+              f"(tokens identical: {serve['tokens_identical']})")
+    if write_root:
+        save_bench_json("wallclock", out)
+    else:
+        from .common import save_json
+        save_json("wallclock", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,7 @@ class CIMConfig:
     restore_yield: Optional[tuple] = None   # per-state yields -> error inject
     interpret: Optional[bool] = None
     backend: str = "auto"          # auto (pallas) | xla — ternary mode
+    domain: str = "float"          # float | int8 — ternary-mode MXU domain
 
 
 def linear(x: jax.Array, w: Any, cfg: CIMConfig = CIMConfig()) -> jax.Array:
@@ -43,7 +44,7 @@ def linear(x: jax.Array, w: Any, cfg: CIMConfig = CIMConfig()) -> jax.Array:
         pw = w if isinstance(w, ops.PackedTernary) else ops.pack_weights(
             w, cfg.packing, cfg.num_trits)
         return ops.ternary_matmul(x, pw, interpret=cfg.interpret,
-                                  backend=cfg.backend)
+                                  backend=cfg.backend, domain=cfg.domain)
     if cfg.mode == "float":
         return x @ w
     if cfg.mode == "exact":

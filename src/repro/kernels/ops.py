@@ -110,33 +110,109 @@ def pack_weights(w: jax.Array, mode: str = "base3",
 
 # ------------------------------------------------------------------ xla path
 
+def _unpack_trit2_xla(p: jax.Array, dtype) -> jax.Array:
+    """uint8 (..., K/4, N) -> (..., K, N) trit values in `dtype`."""
+    fields = [(p >> (2 * i)) & 0x3 for i in range(TRIT2_PER_BYTE)]
+    codes = jnp.stack(fields, axis=-2)                   # (..., K/4, 4, N)
+    dec = (codes == 1).astype(dtype) - (codes == 2).astype(dtype)
+    return dec.reshape(p.shape[:-2] +
+                       (p.shape[-2] * TRIT2_PER_BYTE, p.shape[-1]))
+
+
 def _dequant_xla(w: PackedTernary, dtype=jnp.float32) -> jax.Array:
     """Fused-by-XLA dequantization of a packed weight (any leading dims)."""
     if w.mode == "base3":
         dec = w.data.astype(jnp.float32) - float(BASE3_OFFSET)
     else:
-        p = w.data
-        fields = [(p >> (2 * i)) & 0x3 for i in range(TRIT2_PER_BYTE)]
-        codes = jnp.stack(fields, axis=-2)               # (..., K/4, 4, N)
-        dec = ((codes == 1).astype(jnp.float32)
-               - (codes == 2).astype(jnp.float32))
-        dec = dec.reshape(p.shape[:-2] +
-                          (p.shape[-2] * TRIT2_PER_BYTE, p.shape[-1]))
+        dec = _unpack_trit2_xla(w.data, jnp.float32)
     return (dec * w.scale.astype(jnp.float32)[..., None, :]).astype(dtype)
 
 
 def ternary_matmul_xla(x: jax.Array, w: PackedTernary) -> jax.Array:
     """x (..., K) @ packed w -> (..., N) f32 via fused jnp dequant."""
-    wd = _dequant_xla(w)[: x.shape[-1]]        # trit2 K-padding decodes to 0
+    # trit2 packing pads K to a byte multiple; drop the padded rows on the
+    # CONTRACTION axis (the K-penultimate one — leading-axis slicing would
+    # truncate the layer stack of 3-D scan-over-layers weights).
+    wd = _dequant_xla(w)[..., : x.shape[-1], :]
     return jnp.matmul(x.astype(jnp.float32), wd,
                       preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------- int8 domain
+
+def quantize_acts_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization of activations (..., K).
+
+    Returns (x_int8, x_scale) with x ~ x_int8 * x_scale[..., None].  The
+    shared entry point for every int-domain backend, so pallas/xla/oracle
+    all consume bit-identical integers.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    x_scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    xi = jnp.clip(jnp.round(x.astype(jnp.float32) / x_scale[..., None]),
+                  -127, 127).astype(jnp.int8)
+    return xi, x_scale
+
+
+def _dequant_xla_int8(w: PackedTernary) -> jax.Array:
+    """Packed weight -> int8 trit/value matrix (no float scale applied)."""
+    if w.mode == "base3":
+        return (w.data.astype(jnp.int32) - BASE3_OFFSET).astype(jnp.int8)
+    return _unpack_trit2_xla(w.data, jnp.int8)
+
+
+def ternary_matmul_int8_xla(x_int: jax.Array, x_scale: jax.Array,
+                            w: PackedTernary) -> jax.Array:
+    """Int-domain xla backend: int8 x int8 -> int32 dot, float epilogue.
+
+    Mirrors the kernel's epilogue order (acc * x_scale * w_scale) so the
+    two backends stay bitwise identical.
+    """
+    wd = _dequant_xla_int8(w)[..., : x_int.shape[-1], :]
+    acc = jnp.matmul(x_int, wd, preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * x_scale.astype(jnp.float32)[..., None]
+            * w.scale.astype(jnp.float32)[..., None, :])
+
+
+def ternary_matmul_int8(x: jax.Array, w: PackedTernary, *, interpret=None,
+                        backend: str = "auto", **block_kw) -> jax.Array:
+    """Decode fast lane: quantize x per-row to int8 once, then run the
+    whole matmul in the integer domain (MXU int8 dot, int32 accumulate)
+    with every float scale deferred to the epilogue."""
+    xi, x_scale = quantize_acts_int8(x)
+    if backend == "xla":
+        return ternary_matmul_int8_xla(xi, x_scale, w)
+    if interpret is None:
+        interpret = _default_interpret()
+    lead = x.shape[:-1]
+    xi2 = xi.reshape(-1, xi.shape[-1])
+    xs2 = x_scale.reshape(-1)
+    if w.mode == "trit2" and x.shape[-1] % TRIT2_PER_BYTE:
+        xi2 = jnp.pad(xi2, ((0, 0), (0, -x.shape[-1] % TRIT2_PER_BYTE)))
+    y = _tm_kernel.ternary_matmul_int8(xi2, xs2, w.data, w.scale,
+                                       mode=w.mode, interpret=interpret,
+                                       **block_kw)
+    return y.reshape(*lead, w.data.shape[-1])
 
 
 # ---------------------------------------------------------------- dispatch
 
 def ternary_matmul(x: jax.Array, w: PackedTernary, *, interpret=None,
-                   backend: str = "auto", **block_kw) -> jax.Array:
-    """x (..., K) @ packed w (K, N) -> (..., N) fp32."""
+                   backend: str = "auto", domain: str = "float",
+                   **block_kw) -> jax.Array:
+    """x (..., K) @ packed w (K, N) -> (..., N) fp32.
+
+    Block shapes are shape-adaptive by default (see
+    kernels.ternary_matmul.select_block_shapes); pass bm/bn/bk to pin.
+    domain='int8' routes to the int-domain fast lane
+    (:func:`ternary_matmul_int8`).
+    """
+    if domain == "int8":
+        return ternary_matmul_int8(x, w, interpret=interpret,
+                                   backend=backend, **block_kw)
+    if domain != "float":
+        raise ValueError(f"unknown domain {domain!r} (float | int8)")
     if backend == "xla":
         return ternary_matmul_xla(x, w)
     if interpret is None:

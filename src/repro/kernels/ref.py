@@ -21,6 +21,25 @@ def ternary_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
     return y * jnp.asarray(scale, jnp.float32)
 
 
+def ternary_matmul_int8_ref(x_int: jax.Array, x_scale: jax.Array,
+                            w_packed: jax.Array, scale: jax.Array,
+                            mode: str = "trit2") -> jax.Array:
+    """Oracle for the int-domain fast lane: exact int32 accumulation of
+    pre-quantized int8 activations against the unpacked weight, every
+    float scale applied in the epilogue in the kernel's order."""
+    if mode == "base3":
+        w = unpack_base3(w_packed)                       # int32
+    elif mode == "trit2":
+        w = unpack_trits2(w_packed, k=x_int.shape[-1]).astype(jnp.int32)
+    else:
+        raise ValueError(mode)
+    acc = x_int.astype(jnp.int32) @ w
+    return (acc.astype(jnp.float32)
+            * jnp.asarray(x_scale, jnp.float32)[..., None]
+            * jnp.broadcast_to(jnp.asarray(scale, jnp.float32),
+                               (w.shape[-1],))[None, :])
+
+
 def cim_mac_ref(x_trits: jax.Array, w_trits: jax.Array,
                 adc_bits: int = 5) -> jax.Array:
     """Oracle for kernels.cim_mac: the core functional macro model.

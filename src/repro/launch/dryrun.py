@@ -45,12 +45,14 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              fsdp: bool = True, remat: str = "full",
              opt_name: str = "auto", ep: str = "model", sp: bool = False,
              pure_dp: bool = False, kv_cache: str = "",
+             decode_loop: int = 0,
              extra_tags: dict | None = None) -> dict:
     from repro import configs
     from repro.configs.shapes import SHAPES, runnable
     from repro.dist import sharding as shd
     from repro.launch.input_specs import (abstract_cache,
                                           abstract_model_params,
+                                          decode_loop_specs,
                                           decode_token_spec,
                                           prefill_batch_specs,
                                           train_batch_specs)
@@ -140,15 +142,36 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     else:                                   # decode
         params_abs = abstract_model_params(model, rules, mesh, packed)
         cache_abs = abstract_cache(model, cell, rules, mesh)
-        token_abs = decode_token_spec(cell, rules, mesh)
+        if decode_loop:
+            # the serving fast lane: lower the whole on-device
+            # lax.while_loop decode body (one host transfer per bucket)
+            # instead of a single step — proves the loop-carried cache +
+            # live-mask graph compiles against the production mesh
+            if decode_loop < 2:
+                raise ValueError("--decode-loop needs >= 2: slot 0 of the "
+                                 "token buffer is the prefill token passed "
+                                 "in, so a 1-token loop lowers a graph "
+                                 "with zero decode steps")
+            from repro.serve import make_decode_loop
+            tok_abs, mn_abs, eos_abs = decode_loop_specs(cell, rules, mesh)
+            loop_fn = make_decode_loop(model, decode_loop, cim)
+            lowered = loop_fn.lower(params_abs, tok_abs, cache_abs,
+                                    mn_abs, eos_abs)
+            # the loop body runs at most max_new - 1 decode steps: slot 0
+            # of the buffer is the prefill token passed IN, not generated
+            # by this graph
+            tokens = cell.global_batch * (decode_loop - 1)
+            meta["decode_loop"] = decode_loop
+        else:
+            token_abs = decode_token_spec(cell, rules, mesh)
 
-        def serve_step(params, token, state):
-            logits, st = model.decode(params, token, state, cim=cim)
-            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), st
+            def serve_step(params, token, state):
+                logits, st = model.decode(params, token, state, cim=cim)
+                return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), st
 
-        lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
-            params_abs, token_abs, cache_abs)
-        tokens = cell.global_batch
+            lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
+                params_abs, token_abs, cache_abs)
+            tokens = cell.global_batch
     t_lower = time.monotonic() - t0
 
     t0 = time.monotonic()
@@ -241,6 +264,9 @@ def main(argv=None):
                    help="fold the model axis into data parallelism")
     p.add_argument("--kv-cache", default="", choices=("", "int8"),
                    help="KV cache storage dtype (int8 = scaled)")
+    p.add_argument("--decode-loop", type=int, default=0,
+                   help="decode cells: lower the on-device decode loop "
+                        "with this max-new budget instead of one step")
     p.add_argument("--out-dir", default=DEFAULT_OUT)
     p.add_argument("--tag", default=None,
                    help="suffix for the output file (perf experiments)")
@@ -258,7 +284,8 @@ def main(argv=None):
                        packed=args.packed, microbatches=args.microbatches,
                        fsdp=not args.no_fsdp, remat=args.remat,
                        opt_name=args.opt, ep=args.ep, sp=args.sp,
-                       pure_dp=args.pure_dp, kv_cache=args.kv_cache)
+                       pure_dp=args.pure_dp, kv_cache=args.kv_cache,
+                       decode_loop=args.decode_loop)
     except Exception:
         traceback.print_exc()
         sys.exit(1)

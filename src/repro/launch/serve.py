@@ -25,6 +25,11 @@ def main(argv=None):
     p.add_argument("--max-batch", type=int, default=8)
     p.add_argument("--capacity", type=int, default=256)
     p.add_argument("--packed", choices=("base3", "trit2"))
+    p.add_argument("--domain", default="float", choices=("float", "int8"),
+                   help="ternary-mode MXU domain (int8 = decode fast lane)")
+    p.add_argument("--legacy-loop", action="store_true",
+                   help="per-step decode driver (one host sync per token) "
+                        "instead of the on-device lax.while_loop")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -40,7 +45,8 @@ def main(argv=None):
 
     cim = None
     if args.packed:
-        cim = CIMConfig(mode="ternary", packing=args.packed)
+        cim = CIMConfig(mode="ternary", packing=args.packed,
+                        domain=args.domain)
         params = ternarize_params(params, cim)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"weights {raw_bytes/1e6:.1f}MB -> {hbm_bytes(params)/1e6:.1f}MB "
@@ -55,7 +61,8 @@ def main(argv=None):
             (b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
 
     eng = ServeEngine(model, params, capacity=args.capacity,
-                      max_batch=args.max_batch, cim=cim, extra_inputs=extra)
+                      max_batch=args.max_batch, cim=cim, extra_inputs=extra,
+                      on_device_loop=not args.legacy_loop)
     key = jax.random.key(args.seed + 1)
     for i in range(args.requests):
         k = jax.random.fold_in(key, i)
@@ -70,6 +77,8 @@ def main(argv=None):
         "requests": len(done),
         "generated_tokens": eng.generated_tokens,
         "steps": eng.steps_run,
+        "host_transfers": eng.host_transfers,
+        "decode_loop": "legacy" if args.legacy_loop else "device",
         "wall_s": round(dt, 2),
         "tok_per_s": round(eng.generated_tokens / max(dt, 1e-9), 1),
     }))

@@ -1,2 +1,3 @@
 from .engine import (ServeEngine, Request, make_prefill_step,
-                     make_decode_step, greedy_sample)  # noqa: F401
+                     make_decode_step, make_decode_loop,
+                     greedy_sample)  # noqa: F401

@@ -8,10 +8,24 @@ prefill/decode then routes through the ternary_matmul kernel.
 
 Engine model: requests are queued, bucketed by prompt length (identical
 lengths batch exactly — no padding approximations in scoring), prefilled
-as a batch, then decoded step-by-step with per-row EOS/max-token
-termination.  The decode batch keeps running while any row is live;
-finished rows keep decoding into a scratch token that is discarded
-(standard fixed-batch serving).
+as a batch, then decoded with per-row EOS/max-token termination.  The
+decode batch keeps running while any row is live; finished rows keep
+decoding into a scratch token that is discarded (standard fixed-batch
+serving).
+
+Two decode drivers:
+  on-device (default) — ``make_decode_loop``: a single jitted
+      ``lax.while_loop`` carries (token, cache, live-mask, token buffer)
+      on device, checks EOS + per-row max-new in-graph, and transfers
+      tokens to the host exactly ONCE per bucket.  The legacy driver
+      blocked on a ``jax.device_get`` after every decode step,
+      serializing host and device.
+  legacy step loop (``on_device_loop=False``) — one jitted step per
+      token with a host-side sync; kept for tests that pin per-step
+      behavior and for debugging.
+
+Both drivers produce identical greedy tokens; ``host_transfers`` counts
+device->host syncs so the one-transfer-per-bucket contract is testable.
 
 ``make_decode_step`` is the jitted `serve_step` the multi-pod dry-run
 lowers for the decode_32k / long_500k cells.
@@ -44,6 +58,53 @@ def make_decode_step(model, cim=None) -> Callable:
     return jax.jit(decode_step, donate_argnums=(2,))
 
 
+def make_decode_loop(model, max_new: int, cim=None) -> Callable:
+    """Jitted whole-bucket decode: ``lax.while_loop`` over decode steps
+    with the live-mask, per-row budgets and the token buffer all carried
+    on device.
+
+    fn(params, tok0, state, max_new_row, eos_row) ->
+        (buf (B, max_new) int32, counts (B,) int32, steps () int32)
+
+    tok0 is the prefill-sampled token (recorded at buf[:, 0], exactly
+    like the legacy driver records it before its first decode step);
+    counts[b] is how many of row b's buffer slots are real output
+    (min(EOS position + 1, max_new_row[b])); steps is the number of
+    decode steps executed (for steps_run accounting).  Rows append in
+    lockstep while live, so a row's tokens always occupy buf[b, :counts].
+    """
+    def decode_loop(params, tok, state, max_new_row, eos_row):
+        b = tok.shape[0]
+        buf = jnp.zeros((b, max_new), jnp.int32).at[:, 0].set(tok)
+        counts = jnp.ones((b,), jnp.int32)
+        live = (counts < max_new_row) & (tok != eos_row)
+
+        def cond(carry):
+            step, tok, state, live, buf, counts = carry
+            return jnp.any(live) & (step < max_new - 1)
+
+        def body(carry):
+            step, tok, state, live, buf, counts = carry
+            logits, state = model.decode(params, tok[:, None], state,
+                                         cim=cim)
+            tok = greedy_sample(logits)
+            buf = buf.at[:, step + 1].set(
+                jnp.where(live, tok, buf[:, step + 1]))
+            counts = counts + live.astype(jnp.int32)
+            live = live & (counts < max_new_row) & (tok != eos_row)
+            return step + 1, tok, state, live, buf, counts
+
+        steps, _, _, _, buf, counts = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), tok, state, live, buf,
+                         counts))
+        return buf, counts, steps
+
+    # no donate_argnums: the while_loop carries the cache internally and
+    # XLA cannot alias the donated input into the loop state (it would
+    # only warn on every bucket).
+    return jax.jit(decode_loop)
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -57,32 +118,46 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, capacity: int = 512,
-                 max_batch: int = 8, cim=None, extra_inputs=None):
+                 max_batch: int = 8, cim=None, extra_inputs=None,
+                 on_device_loop: bool = True):
         self.model = model
         self.params = params
         self.capacity = capacity
         self.max_batch = max_batch
         self.cim = cim
         self.extra_inputs = extra_inputs or {}
+        self.on_device_loop = on_device_loop
         self._prefill = make_prefill_step(model, capacity, cim)
         self._decode = make_decode_step(model, cim)
+        self._loops: dict[int, Callable] = {}   # max_new cap -> jitted loop
         self.queue: list[Request] = []
         self.completed: list[Request] = []
         self.steps_run = 0
+        self.host_transfers = 0
 
     def submit(self, req: Request):
         self.queue.append(req)
 
     # ------------------------------------------------------------------
+    def _device_get(self, x):
+        """All device->host syncs route through here (transfer counting:
+        the on-device loop must do exactly one per bucket)."""
+        self.host_transfers += 1
+        return jax.device_get(x)
+
     def _next_bucket(self) -> list[Request]:
-        """Pop up to max_batch queued requests sharing one prompt length."""
+        """Pop up to max_batch queued requests sharing one prompt length
+        (single pass: partition the queue instead of list.remove per hit)."""
         if not self.queue:
             return []
         length = len(self.queue[0].prompt)
-        batch = [r for r in self.queue if len(r.prompt) == length]
-        batch = batch[: self.max_batch]
-        for r in batch:
-            self.queue.remove(r)
+        batch, rest = [], []
+        for r in self.queue:
+            if len(batch) < self.max_batch and len(r.prompt) == length:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
         return batch
 
     def _batch_inputs(self, reqs: list[Request]) -> dict:
@@ -92,30 +167,64 @@ class ServeEngine:
             batch[k] = fn(len(reqs))
         return batch
 
-    def run(self) -> list[Request]:
-        """Serve the whole queue; returns completed requests."""
-        while self.queue:
-            reqs = self._next_bucket()
-            t0 = time.monotonic()
-            tok, state = self._prefill(self.params, self._batch_inputs(reqs))
+    def _decode_loop_for(self, max_new: int) -> Callable:
+        # bucket the static loop width up to a power of two: max_new is
+        # request-controlled, and compiling (and retaining) one jitted
+        # while_loop per distinct value would grow without bound.  The
+        # live-mask still exits at the true per-row budgets; only the
+        # token buffer is wider.
+        cap = 1 << max(max_new - 1, 0).bit_length()
+        if cap not in self._loops:
+            self._loops[cap] = make_decode_loop(self.model, cap, self.cim)
+        return self._loops[cap]
+
+    # ------------------------------------------------------------------
+    def _run_bucket_device(self, reqs: list[Request]):
+        """Fast lane: prefill, then one on-device decode loop and ONE
+        host transfer for the whole bucket."""
+        tok, state = self._prefill(self.params, self._batch_inputs(reqs))
+        self.steps_run += 1
+        max_new = max(r.max_new for r in reqs)
+        loop = self._decode_loop_for(max_new)
+        max_new_row = jnp.asarray([r.max_new for r in reqs], jnp.int32)
+        eos_row = jnp.asarray([r.eos_id for r in reqs], jnp.int32)
+        buf, counts, steps = loop(self.params, tok, state, max_new_row,
+                                  eos_row)
+        buf, counts, steps = self._device_get((buf, counts, steps))
+        self.steps_run += int(steps)
+        for r, row, cnt in zip(reqs, buf, counts):
+            r.out_tokens.extend(int(t) for t in row[: int(cnt)])
+
+    def _run_bucket_legacy(self, reqs: list[Request]):
+        """Original step-by-step driver: one host sync per decode step."""
+        tok, state = self._prefill(self.params, self._batch_inputs(reqs))
+        self.steps_run += 1
+        live = [True] * len(reqs)
+        for i, (r, t) in enumerate(zip(reqs, self._device_get(tok))):
+            r.out_tokens.append(int(t))
+            if len(r.out_tokens) >= r.max_new or int(t) == r.eos_id:
+                live[i] = False
+        max_new = max(r.max_new for r in reqs)
+        for _ in range(max_new - 1):
+            if not any(live):
+                break
+            tok, state = self._decode(self.params, tok, state)
             self.steps_run += 1
-            live = [True] * len(reqs)
-            for i, (r, t) in enumerate(zip(reqs, jax.device_get(tok))):
+            for i, (r, t) in enumerate(zip(reqs, self._device_get(tok))):
+                if not live[i]:
+                    continue
                 r.out_tokens.append(int(t))
                 if len(r.out_tokens) >= r.max_new or int(t) == r.eos_id:
                     live[i] = False
-            max_new = max(r.max_new for r in reqs)
-            for _ in range(max_new - 1):
-                if not any(live):
-                    break
-                tok, state = self._decode(self.params, tok, state)
-                self.steps_run += 1
-                for i, (r, t) in enumerate(zip(reqs, jax.device_get(tok))):
-                    if not live[i]:
-                        continue
-                    r.out_tokens.append(int(t))
-                    if len(r.out_tokens) >= r.max_new or int(t) == r.eos_id:
-                        live[i] = False
+
+    def run(self) -> list[Request]:
+        """Serve the whole queue; returns completed requests."""
+        run_bucket = (self._run_bucket_device if self.on_device_loop
+                      else self._run_bucket_legacy)
+        while self.queue:
+            reqs = self._next_bucket()
+            t0 = time.monotonic()
+            run_bucket(reqs)
             dt = time.monotonic() - t0
             for r in reqs:
                 r.done = True

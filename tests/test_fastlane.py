@@ -1,0 +1,260 @@
+"""Decode-path fast lane: shape-adaptive block dispatch, the int8
+MXU domain, the on-device serve loop, and the wall-clock bench metrics.
+
+Contracts pinned here (ISSUE 2 acceptance):
+  * decode shapes (M = 1/4/8) agree pallas == xla == oracle in both
+    packing modes, float and int8 domains (int8 bitwise);
+  * adaptive blocking cuts padded-M FLOP waste >= 8x vs fixed bm=128
+    for batch <= 16 decode shapes;
+  * the on-device decode loop emits tokens identical to the legacy
+    per-step driver and performs exactly ONE host transfer per bucket.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ternary_matmul import (DEFAULT_BLOCKS, SUBLANE,
+                                          select_block_shapes,
+                                          ternary_matmul_int8)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------- block selection
+
+class TestSelectBlockShapes:
+    def test_prefill_keeps_mxu_tiles(self):
+        assert select_block_shapes(512, 2048, 2048) == DEFAULT_BLOCKS
+        assert select_block_shapes(128, 4096, 1024) == DEFAULT_BLOCKS
+
+    @pytest.mark.parametrize("m", [1, 4, 8, 16, 64])
+    def test_decode_shrinks_bm_to_sublane_multiple(self, m):
+        bm, bn, bk = select_block_shapes(m, 2048, 2048)
+        assert bm == -(-m // SUBLANE) * SUBLANE
+        assert bm < 128 and bk >= 512     # deeper K tile for skinny M
+        assert bn % 128 == 0 and bk % 128 == 0
+
+    def test_bk_clamped_to_k_extent(self):
+        _, _, bk = select_block_shapes(4, 256, 512)
+        assert bk == 256                  # round_up(256, 128), not 1024
+
+    def test_trit2_packed_tile_stays_whole(self):
+        _, _, bk = select_block_shapes(8, 4096, 4096, "trit2")
+        assert bk % 4 == 0
+
+    def test_vmem_budget_shrinks_bk(self):
+        _, _, bk = select_block_shapes(8, 65536, 128,
+                                       vmem_budget_bytes=256 * 1024)
+        assert bk <= 512
+
+    def test_int8_domain_uses_int8_sublane(self):
+        # int8 second-to-last-dim tile is 32 rows, not the f32 8
+        bm, _, _ = select_block_shapes(8, 2048, 2048, domain="int8")
+        assert bm == 32
+        assert select_block_shapes(128, 2048, 2048,
+                                   domain="int8") == DEFAULT_BLOCKS
+
+
+# ------------------------------------------- decode shapes, three backends
+
+DECODE_MS = [1, 4, 8]
+
+
+class TestDecodeShapeEquivalence:
+    @pytest.mark.parametrize("mode", ["base3", "trit2"])
+    @pytest.mark.parametrize("m", DECODE_MS)
+    def test_float_pallas_xla_oracle(self, m, mode):
+        key = jax.random.PRNGKey(m)
+        x = jax.random.normal(key, (m, 384), jnp.float32)
+        w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (384, 256))
+        pw = ops.pack_weights(w, mode)
+        y_pallas = ops.ternary_matmul(x, pw, interpret=True)  # auto blocks
+        y_xla = ops.ternary_matmul(x, pw, backend="xla")
+        y_oracle = ref.ternary_matmul_ref(x, pw.data, pw.scale, mode)
+        np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_oracle),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_oracle),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("mode", ["base3", "trit2"])
+    @pytest.mark.parametrize("m", DECODE_MS)
+    def test_int8_domain_bitwise(self, m, mode):
+        """Integer accumulation is exact: all three backends bit-match."""
+        key = jax.random.PRNGKey(100 + m)
+        x = jax.random.normal(key, (m, 384), jnp.float32)
+        w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (384, 256))
+        pw = ops.pack_weights(w, mode)
+        y_pallas = ops.ternary_matmul_int8(x, pw, interpret=True)
+        y_xla = ops.ternary_matmul_int8(x, pw, backend="xla")
+        xi, xs = ops.quantize_acts_int8(x)
+        y_oracle = ref.ternary_matmul_int8_ref(xi, xs, pw.data, pw.scale,
+                                               mode)
+        np.testing.assert_array_equal(np.asarray(y_pallas),
+                                      np.asarray(y_xla))
+        np.testing.assert_array_equal(np.asarray(y_xla),
+                                      np.asarray(y_oracle))
+
+    @pytest.mark.parametrize("mode", ["base3", "trit2"])
+    def test_int8_domain_via_dispatch_and_close_to_float(self, mode):
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(key, (8, 256), jnp.float32)
+        w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (256, 128))
+        pw = ops.pack_weights(w, mode)
+        y_int = ops.ternary_matmul(x, pw, domain="int8", backend="xla")
+        y_f = ops.ternary_matmul(x, pw, backend="xla")
+        rel = float(jnp.linalg.norm(y_int - y_f) /
+                    (jnp.linalg.norm(y_f) + 1e-9))
+        assert rel < 0.02, rel            # 7-bit activations: ~1% error
+        with pytest.raises(ValueError, match="domain"):
+            ops.ternary_matmul(x, pw, domain="INT8")
+
+    def test_int8_kernel_explicit_blocks_match_auto(self):
+        key = jax.random.PRNGKey(9)
+        x = jax.random.normal(key, (5, 200), jnp.float32)
+        w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (200, 96))
+        pw = ops.pack_weights(w, "trit2")
+        auto = ops.ternary_matmul_int8(x, pw, interpret=True)
+        pinned = ops.ternary_matmul_int8(x, pw, interpret=True,
+                                         bm=8, bn=32, bk=64)
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(pinned))
+
+
+class TestXlaStackedWeights:
+    def test_trit2_kpad_slices_contraction_axis(self):
+        """Regression: layer-stacked (L, K/4, N) trit2 weights with K not
+        a byte multiple — the K-padding slice must hit the K axis, not the
+        leading layer axis."""
+        key = jax.random.PRNGKey(3)
+        k = 102                            # pads to 104 trits
+        w = 0.02 * jax.random.normal(key, (2, k, 48))
+        pw = ops.pack_weights(w, "trit2")
+        assert pw.data.shape == (2, 26, 48)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (4, k))
+        y = ops.ternary_matmul_xla(x, pw)          # (2, 4, 48)
+        assert y.shape == (2, 4, 48)
+        for layer in range(2):
+            pl_ = ops.PackedTernary(pw.data[layer], pw.scale[layer], "trit2")
+            np.testing.assert_allclose(np.asarray(y[layer]),
+                                       np.asarray(ops.ternary_matmul_xla(
+                                           x, pl_)), rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------- bench metrics
+
+class TestWallclockMetrics:
+    def test_decode_flop_waste_reduction_ge_8x(self):
+        from benchmarks.wallclock import padded_flops
+        for m in (1, 4, 8, 16):
+            for mode in ("base3", "trit2"):
+                adaptive = select_block_shapes(m, 1024, 1024, mode)
+                fixed = DEFAULT_BLOCKS
+                red = (padded_flops(m, 1024, 1024, fixed)
+                       / padded_flops(m, 1024, 1024, adaptive))
+                assert red >= 8.0, (m, mode, red)
+
+    def test_shape_cell_schema(self):
+        from benchmarks import schema
+        from benchmarks.wallclock import shape_cell
+        cell = shape_cell(8, 1024, 1024, "base3", "decode", "xla",
+                          time_it=False)
+        assert schema.WALLCLOCK_CELL <= cell.keys()
+        assert cell["flop_waste_fixed"] == 16 * cell["flop_waste_adaptive"]
+        assert cell["hbm_bytes_adaptive"] < cell["hbm_bytes_fixed"]
+
+    def test_schema_flags_missing_keys(self):
+        from benchmarks import schema
+        errs = schema.validate("wallclock", {"backend": "xla"})
+        assert errs and "missing top-level keys" in errs[0]
+
+
+# ------------------------------------------------------- serve fast lane
+
+def _setup(arch="internlm2-1.8b"):
+    from repro import configs
+    from repro.models import registry
+    cfg = dataclasses.replace(configs.smoke(arch), dtype=jnp.float32)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _submit_mixed(eng, cfg, n=6, plen=8):
+    from repro.serve import Request
+    key = jax.random.key(1)
+    for i in range(n):
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (plen,), 0,
+                                    cfg.vocab_size)
+        eng.submit(Request(uid=i, prompt=prompt,
+                           max_new=5 if i % 2 else 3))
+
+
+class TestOnDeviceServeLoop:
+    def test_token_identical_to_legacy(self):
+        from repro.serve import ServeEngine
+        cfg, model, params = _setup()
+        outs = {}
+        for on_device in (True, False):
+            eng = ServeEngine(model, params, capacity=64, max_batch=4,
+                              on_device_loop=on_device)
+            _submit_mixed(eng, cfg)
+            outs[on_device] = {r.uid: r.out_tokens for r in eng.run()}
+        assert outs[True] == outs[False]
+        assert sorted(len(t) for t in outs[True].values()) == [3, 3, 3,
+                                                               5, 5, 5]
+
+    def test_one_host_transfer_per_bucket(self):
+        from repro.serve import ServeEngine
+        cfg, model, params = _setup()
+        eng = ServeEngine(model, params, capacity=64, max_batch=4)
+        _submit_mixed(eng, cfg, n=6)       # 6 reqs, max_batch 4 -> 2 buckets
+        eng.run()
+        assert eng.host_transfers == 2
+        # legacy driver syncs every step: strictly more transfers
+        leg = ServeEngine(model, params, capacity=64, max_batch=4,
+                          on_device_loop=False)
+        _submit_mixed(leg, cfg, n=6)
+        leg.run()
+        assert leg.host_transfers > leg.steps_run / 2
+        assert leg.steps_run == eng.steps_run
+
+    def test_eos_stops_row_on_device(self):
+        from repro.serve import Request, ServeEngine, make_prefill_step
+        cfg, model, params = _setup()
+        prompt = jnp.zeros((4,), jnp.int32)
+        pre = make_prefill_step(model, 32)
+        tok, _ = pre(params, {"tokens": prompt[None]})
+        eng = ServeEngine(model, params, capacity=32, max_batch=1)
+        eng.submit(Request(uid=0, prompt=prompt, max_new=8,
+                           eos_id=int(tok[0])))
+        done = eng.run()
+        assert len(done[0].out_tokens) == 1
+        assert eng.host_transfers == 1
+
+    def test_decode_loop_matches_step_loop_directly(self):
+        from repro.serve import (make_decode_loop, make_decode_step,
+                                 make_prefill_step)
+        cfg, model, params = _setup()
+        prompts = jnp.stack([jnp.arange(6, dtype=jnp.int32),
+                             jnp.arange(6, dtype=jnp.int32)[::-1]])
+        pre = make_prefill_step(model, 32)
+        max_new = 5
+        tok, state = pre(params, {"tokens": prompts})
+        loop = make_decode_loop(model, max_new)
+        buf, counts, steps = loop(
+            params, tok, state,
+            jnp.asarray([max_new, max_new], jnp.int32),
+            jnp.asarray([-1, -1], jnp.int32))
+        assert int(steps) == max_new - 1
+        tok2, state2 = pre(params, {"tokens": prompts})
+        dec = make_decode_step(model)
+        want = [np.asarray(tok2)]
+        for _ in range(max_new - 1):
+            tok2, state2 = dec(params, tok2, state2)
+            want.append(np.asarray(tok2))
+        np.testing.assert_array_equal(np.asarray(buf),
+                                      np.stack(want, axis=1))
+        np.testing.assert_array_equal(np.asarray(counts), [max_new] * 2)

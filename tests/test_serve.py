@@ -19,9 +19,15 @@ def _setup(arch="internlm2-1.8b", dtype=jnp.float32):
     return cfg, model, params
 
 
-def test_engine_generates_batch():
+import pytest
+
+
+@pytest.mark.parametrize("on_device_loop", [True, False],
+                         ids=["device-loop", "legacy-step-loop"])
+def test_engine_generates_batch(on_device_loop):
     cfg, model, params = _setup()
-    eng = ServeEngine(model, params, capacity=64, max_batch=4)
+    eng = ServeEngine(model, params, capacity=64, max_batch=4,
+                      on_device_loop=on_device_loop)
     key = jax.random.key(1)
     for i in range(6):
         prompt = jax.random.randint(jax.random.fold_in(key, i), (8,), 0,
@@ -33,11 +39,14 @@ def test_engine_generates_batch():
     assert all(0 <= t < cfg.padded_vocab for r in done for t in r.out_tokens)
 
 
-def test_engine_matches_manual_loop():
+@pytest.mark.parametrize("on_device_loop", [True, False],
+                         ids=["device-loop", "legacy-step-loop"])
+def test_engine_matches_manual_loop(on_device_loop):
     cfg, model, params = _setup()
     prompt = jax.random.randint(jax.random.key(2), (8,), 0, cfg.vocab_size)
 
-    eng = ServeEngine(model, params, capacity=64, max_batch=1)
+    eng = ServeEngine(model, params, capacity=64, max_batch=1,
+                      on_device_loop=on_device_loop)
     eng.submit(Request(uid=0, prompt=prompt, max_new=4))
     got = eng.run()[0].out_tokens
 

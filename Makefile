@@ -5,16 +5,23 @@
 # reproducible regardless of the caller's environment.
 XLA_DEVICES ?= 8
 
-.PHONY: verify test test-fast dryrun-smoke bench
+.PHONY: verify test test-fast ci dryrun-smoke bench
 
 verify: test
 
 test:
 	XLA_DEVICES=$(XLA_DEVICES) scripts/verify.sh
 
-# skip the multi-minute subprocess tests (inner loop)
+# skip the multi-minute subprocess tests (inner loop) — routed through
+# scripts/verify.sh so it runs under the SAME fake-device XLA_FLAGS and
+# path setup as the full suite (a bare `pytest` invocation here used to
+# diverge from what CI enforces)
 test-fast:
-	python -m pytest -x -q -m "not slow"
+	XLA_DEVICES=$(XLA_DEVICES) scripts/verify.sh -m "not slow"
+
+# the full CI pipeline locally: tier-1 suite + the bench schema gate —
+# exactly what .github/workflows/ci.yml runs (as separate jobs)
+ci: test bench
 
 # perf-trajectory benchmarks (kernel_bench + wallclock, reduced sweeps)
 # under the same 8-fake-device env as the tests; fails if the tracked

@@ -13,11 +13,15 @@ import os
 # artifact name -> required top-level keys
 TOP_LEVEL = {
     "wallclock": {
-        "backend", "platform", "shapes", "serve",
+        "backend", "platform", "shapes", "serve", "serve_continuous",
         "min_decode_flop_waste_reduction",
         "claim_waste_reduction_ge_8x",
         "claim_device_loop_single_transfer",
         "claim_loops_token_identical",
+        "claim_continuous_beats_bucket_tokps",
+        "claim_continuous_beats_bucket_p99",
+        "claim_continuous_tokens_identical",
+        "claim_chunk_transfer_accounting",
     },
     "kernel_bench": {
         "sweep", "max_rel_err", "all_match_oracle",
@@ -32,6 +36,20 @@ WALLCLOCK_CELL = {
     "flop_waste_adaptive", "flop_waste_fixed", "flop_waste_reduction",
     "hbm_bytes_adaptive", "hbm_bytes_fixed",
 }
+
+# wallclock serve_continuous section: the continuous-vs-bucket artifact
+# contract (ROADMAP §Performance)
+SERVE_CONTINUOUS = {
+    "slots", "chunk", "trace", "bucket", "continuous",
+    "claim_continuous_beats_bucket_tokps",
+    "claim_continuous_beats_bucket_p99",
+    "claim_continuous_tokens_identical",
+    "claim_chunk_transfer_accounting",
+}
+SERVE_CONTINUOUS_DRIVER = {"tok_per_s", "wall_s", "tokens", "p50_s",
+                           "p99_s"}
+SERVE_CONTINUOUS_ONLY = {"slot_occupancy", "host_transfers", "chunks",
+                         "decode_steps"}
 
 
 def validate(name: str, payload: dict) -> list[str]:
@@ -53,6 +71,28 @@ def validate(name: str, payload: dict) -> list[str]:
                               f"{sorted(miss)}")
         if not payload.get("shapes"):
             errors.append("wallclock: empty shapes sweep")
+        sc = payload.get("serve_continuous")
+        if isinstance(sc, dict):
+            miss = SERVE_CONTINUOUS - sc.keys()
+            if miss:
+                errors.append(f"wallclock serve_continuous: missing "
+                              f"{sorted(miss)}")
+            for drv in ("bucket", "continuous"):
+                sub = sc.get(drv)
+                if not isinstance(sub, dict):
+                    if drv in sc:          # present but malformed
+                        errors.append(f"wallclock serve_continuous."
+                                      f"{drv}: not an object")
+                    continue               # absent: already reported
+                need = SERVE_CONTINUOUS_DRIVER | (
+                    SERVE_CONTINUOUS_ONLY if drv == "continuous"
+                    else set())
+                miss = need - sub.keys()
+                if miss:
+                    errors.append(f"wallclock serve_continuous.{drv}: "
+                                  f"missing {sorted(miss)}")
+        elif "serve_continuous" in payload:
+            errors.append("wallclock serve_continuous: not an object")
     return errors
 
 

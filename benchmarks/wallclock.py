@@ -153,6 +153,182 @@ def serve_loop_bench(max_new: int = 8, requests: int = 4,
     }
 
 
+def serve_continuous_bench(fast: bool = False,
+                           arch: str = "internlm2-1.8b") -> dict:
+    """Continuous-batching Scheduler vs the bucket driver under a bursty
+    arrival trace: tok/s, p50/p99 request latency (completion -
+    arrival), slot occupancy, and the per-chunk transfer accounting.
+
+    The trace is adversarial for bucket-at-a-time serving in the ways
+    production traffic is: three interleaved prompt lengths split each
+    burst into under-filled per-length buckets that serialize, mixed
+    max-new budgets leave bucket rows decoding dead air behind the
+    straggler while the continuous pool retires and refills those
+    slots, and the burst gap is shorter than the bucket driver's
+    per-burst serve time, so its backlog grows where the pool absorbs
+    the overload.  Both drivers replay the identical trace at the same
+    pool width (slots == max_batch), on a widened smoke model
+    (d_model 256) where a decode step costs the same in both drivers —
+    so the delta measures scheduling, not kernel shape effects.
+
+    Bursts arrive atomically (spread 0) and identical in composition
+    (the length/max-new cycles divide the burst size), so the bucket
+    driver only ever pops a fresh burst (per-length width 2) or a
+    backlog of two (per-length width 4); the two warmup passes — one
+    burst at t=0, then two bursts at t=0 — cover exactly those
+    (batch width x prompt length x loop cap) compile-cache keys, and
+    the timed replays run warm executables only.  `fast` reduces the
+    best-of repeat count, not the trace.
+
+    Per-request tokens must stay bitwise identical between the drivers
+    (the chunked loop is a re-scheduling of the same per-request
+    computation); `claim_continuous_tokens_identical` gates it.
+    """
+    import dataclasses
+    import time as _time
+
+    from repro import configs
+    from repro.models import registry
+    from repro.serve import (Request, Scheduler, ServeEngine,
+                             bursty_arrivals, latency_stats, make_trace)
+
+    cfg = dataclasses.replace(configs.smoke(arch), dtype=jnp.float32,
+                              d_model=256, d_ff=768, num_layers=4)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+
+    slots = 4
+    chunk = 8
+    n = 12
+    gap_s = 0.15
+    # the max-new cycle is laid out against the length cycle (both
+    # divide the burst size of 6 — the warmup-coverage invariant below)
+    # so every per-length bucket pairs a 24-token straggler with a
+    # short row, while the pool spreads the stragglers across slots
+    # and refills around them
+    arrivals = bursty_arrivals(n, bursts=2, gap_s=gap_s, spread_s=0.0,
+                               seed=7)
+    trace = make_trace(arrivals, prompt_lens=[8, 12, 16],
+                       max_news=[24, 6, 12, 6, 24, 12])
+
+    def requests(records) -> list:
+        out = []
+        for i, rec in enumerate(records):
+            prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                        (rec["prompt_len"],), 0,
+                                        cfg.vocab_size)
+            out.append(Request(uid=i, prompt=prompt,
+                               max_new=rec["max_new"],
+                               eos_id=rec["eos_id"],
+                               arrival_s=rec["arrival_s"]))
+        return out
+
+    # warmup workloads: one burst at t=0 (fresh-burst widths), then two
+    # bursts at t=0 (backlog widths) — together they hit every
+    # (batch width x prompt length x loop cap) compile-cache key the
+    # timed replay can reach, in- or out-of-overload
+    warms = ([dict(rec, arrival_s=0.0) for rec in trace[: n // 2]],
+             [dict(rec, arrival_s=0.0) for rec in trace])
+    # best-of-N with a FIXED, pre-registered N (no adaptive stopping —
+    # retrying only while a claim fails would bias the gate toward
+    # passing): OS noise only ever slows a replay down, so the
+    # per-metric minimum over N replays is the clean estimate for BOTH
+    # drivers symmetrically
+    repeats = 4 if fast else 6
+
+    bucket = ServeEngine(model, params, capacity=64, max_batch=slots)
+    for warm in warms:
+        for r in requests(warm):
+            bucket.submit(r)
+        bucket.run_trace()
+
+    def bucket_replay():
+        done0, tok0 = len(bucket.completed), bucket.generated_tokens
+        for r in requests(trace):
+            bucket.submit(r)
+        t0 = _time.perf_counter()
+        bucket.run_trace()
+        wall = _time.perf_counter() - t0
+        done = bucket.completed[done0:]
+        tokens = bucket.generated_tokens - tok0
+        return {"tok_per_s": round(tokens / max(wall, 1e-9), 1),
+                "wall_s": round(wall, 3), "tokens": tokens,
+                **latency_stats(done)}, done
+
+    sched = Scheduler(model, params, capacity=64, slots=slots, chunk=chunk)
+    for warm in warms:
+        for r in requests(warm):
+            sched.submit(r)
+        sched.run()
+
+    def sched_replay():
+        done0, tok0 = len(sched.completed), sched.generated_tokens
+        base = (sched.chunks_run, sched.host_transfers,
+                sched.decode_steps, sched.occupied_slot_steps)
+        for r in requests(trace):
+            sched.submit(r)
+        t0 = _time.perf_counter()
+        sched.run()
+        wall = _time.perf_counter() - t0
+        done = sched.completed[done0:]
+        tokens = sched.generated_tokens - tok0
+        chunks = sched.chunks_run - base[0]
+        steps = sched.decode_steps - base[2]
+        return {"tok_per_s": round(tokens / max(wall, 1e-9), 1),
+                "wall_s": round(wall, 3), "tokens": tokens,
+                **latency_stats(done),
+                "chunks": chunks,
+                "host_transfers": sched.host_transfers - base[1],
+                "decode_steps": steps,
+                "slot_occupancy": round(
+                    (sched.occupied_slot_steps - base[3])
+                    / max(slots * steps, 1), 3)}, done
+
+    def best_of(replays):
+        """Best-of merge: each timing metric takes its own best replay
+        (min wall/latency, max tok/s — OS noise only ever worsens a
+        replay, and p99 over 12 requests is a max statistic, so the
+        min-wall replay is NOT necessarily the clean-p99 one); the
+        deterministic accounting fields come from the min-wall replay.
+        Applied identically to both drivers."""
+        stats, done = min(replays, key=lambda r: r[0]["wall_s"])
+        stats = dict(stats)
+        for key_, pick in (("tok_per_s", max), ("wall_s", min),
+                           ("p50_s", min), ("p99_s", min),
+                           ("mean_s", min)):
+            stats[key_] = pick(r[0][key_] for r in replays)
+        return stats, done
+
+    # interleave the drivers' replays so a transient noise window on
+    # the host degrades both pools alike rather than one wholesale
+    bucket_replays, sched_replays = [], []
+    for _ in range(repeats):
+        bucket_replays.append(bucket_replay())
+        sched_replays.append(sched_replay())
+    bucket_stats, bucket_done = best_of(bucket_replays)
+    sched_stats, sched_done = best_of(sched_replays)
+
+    bucket_out = {r.uid: list(r.out_tokens) for r in bucket_done}
+    sched_out = {r.uid: list(r.out_tokens) for r in sched_done}
+    return {
+        "arch": arch, "model": "smoke-wide-256", "requests": n,
+        "slots": slots, "chunk": chunk, "gap_s": gap_s,
+        "trace": trace,
+        "bucket": bucket_stats,
+        "continuous": sched_stats,
+        "claim_continuous_beats_bucket_tokps":
+            sched_stats["tok_per_s"] > bucket_stats["tok_per_s"],
+        "claim_continuous_beats_bucket_p99":
+            sched_stats["p99_s"] < bucket_stats["p99_s"],
+        # per-request token VALUES across drivers (bitwise parity)
+        "claim_continuous_tokens_identical": sched_out == bucket_out,
+        # the O(1)-transfer-per-chunk contract, at the bench level
+        "claim_chunk_transfer_accounting":
+            sched_stats["host_transfers"] == sched_stats["chunks"],
+    }
+
+
 def run(verbose: bool = True, fast: bool = False,
         write_root: bool | None = None) -> dict:
     """write_root=True rewrites the tracked repo-root baseline
@@ -162,6 +338,12 @@ def run(verbose: bool = True, fast: bool = False,
     if write_root is None:
         write_root = not fast
     backend = "auto" if jax.default_backend() == "tpu" else "xla"
+    # serve benches run FIRST: the timed shape-cell sweep saturates the
+    # host thread pools for minutes, and the latency-sensitive serving
+    # comparison (arrival sleeps, chunk-boundary host work) degrades
+    # asymmetrically on contended small hosts if it runs in that wake
+    serve = serve_loop_bench(max_new=4 if fast else 8)
+    serve_continuous = serve_continuous_bench(fast=fast)
     decode = DECODE_SHAPES[:2] if fast else DECODE_SHAPES
     prefill = PREFILL_SHAPES[:1] if fast else PREFILL_SHAPES
     shapes = []
@@ -175,7 +357,6 @@ def run(verbose: bool = True, fast: bool = False,
     decode_cells = [c for c in shapes if c["phase"] == "decode"
                     and c["m"] <= 16]
     min_reduction = min(c["flop_waste_reduction"] for c in decode_cells)
-    serve = serve_loop_bench(max_new=4 if fast else 8)
 
     out = {
         "backend": backend,
@@ -183,11 +364,20 @@ def run(verbose: bool = True, fast: bool = False,
         "fast": fast,
         "shapes": shapes,
         "serve": serve,
+        "serve_continuous": serve_continuous,
         "min_decode_flop_waste_reduction": min_reduction,
         "claim_waste_reduction_ge_8x": bool(min_reduction >= 8.0),
         "claim_device_loop_single_transfer":
             serve["claim_device_loop_single_transfer"],
         "claim_loops_token_identical": serve["tokens_identical"],
+        "claim_continuous_beats_bucket_tokps":
+            serve_continuous["claim_continuous_beats_bucket_tokps"],
+        "claim_continuous_beats_bucket_p99":
+            serve_continuous["claim_continuous_beats_bucket_p99"],
+        "claim_continuous_tokens_identical":
+            serve_continuous["claim_continuous_tokens_identical"],
+        "claim_chunk_transfer_accounting":
+            serve_continuous["claim_chunk_transfer_accounting"],
     }
     if verbose:
         print(f"  {len(shapes)} shape cells ({backend} backend); decode "
@@ -203,6 +393,13 @@ def run(verbose: bool = True, fast: bool = False,
               f" vs legacy {serve['legacy_loop']['tok_per_s']} tok/s / "
               f"{serve['legacy_loop']['host_transfers']} transfers "
               f"(tokens identical: {serve['tokens_identical']})")
+        sc, sb = serve_continuous["continuous"], serve_continuous["bucket"]
+        print(f"  continuous: {sc['tok_per_s']} tok/s p99 {sc['p99_s']}s "
+              f"occ {sc['slot_occupancy']} vs bucket {sb['tok_per_s']} "
+              f"tok/s p99 {sb['p99_s']}s (tokens identical: "
+              f"{serve_continuous['claim_continuous_tokens_identical']}, "
+              f"transfers==chunks: "
+              f"{serve_continuous['claim_chunk_transfer_accounting']})")
     if write_root:
         save_bench_json("wallclock", out)
     else:

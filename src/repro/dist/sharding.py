@@ -55,6 +55,10 @@ class UnknownLogicalAxisError(KeyError):
 _TRAIN_AXES = {
     # activations
     "batch": mesh_lib.DP_AXES,
+    # continuous-batching slot pool: the pool's leading slot axis IS the
+    # serving batch axis, so it folds over the same DP axes (the per-slot
+    # inner batch of 1 then replicates by divisibility)
+    "slot": mesh_lib.DP_AXES,
     "seq": None,
     "kv_seq": None,
     "head_count": "model",
@@ -179,6 +183,24 @@ def logical_to_spec(axes: tuple, shape: tuple, rules: Rules,
     while entries and entries[-1] is None:
         entries.pop()
     return P(*entries)
+
+
+def slot_spmd_axes(rules: Rules, mesh, slots: int):
+    """Physical mesh axes the slot-pool axis folds over, in the form
+    ``jax.vmap(spmd_axis_name=...)`` takes — how the chunked decode loop
+    (serve.make_chunked_decode_loop) threads the 'slot' rule into every
+    activation constraint under its per-slot vmap.
+
+    Applies the same folding/divisibility policy as logical_to_spec
+    (trailing DP axes dropped until `slots` divides), so an indivisible
+    pool replicates instead of failing inside vmap.  Returns None when
+    the slot axis resolves to replicated (e.g. off-mesh engines).
+    """
+    entry = _resolve_dim(rules.physical("slot"), slots, "slot",
+                         mesh_lib.axis_sizes(mesh), set(), rules.quantum)
+    if entry is None:
+        return None
+    return entry if isinstance(entry, str) else tuple(entry)
 
 
 def spec_tree(defs: Any, rules: Rules, mesh) -> Any:

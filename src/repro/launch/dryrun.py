@@ -45,7 +45,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              fsdp: bool = True, remat: str = "full",
              opt_name: str = "auto", ep: str = "model", sp: bool = False,
              pure_dp: bool = False, kv_cache: str = "",
-             decode_loop: int = 0,
+             decode_loop: int = 0, continuous: int = 0,
              extra_tags: dict | None = None) -> dict:
     from repro import configs
     from repro.configs.shapes import SHAPES, runnable
@@ -55,6 +55,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
                                           decode_loop_specs,
                                           decode_token_spec,
                                           prefill_batch_specs,
+                                          slot_pool_specs,
                                           train_batch_specs)
     from repro.launch.mesh import make_production_mesh
     from repro.models import registry
@@ -141,12 +142,33 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
         tokens = cell.global_batch * cell.seq_len
     else:                                   # decode
         params_abs = abstract_model_params(model, rules, mesh, packed)
-        cache_abs = abstract_cache(model, cell, rules, mesh)
-        if decode_loop:
+        if continuous:
+            # continuous-batching slot pool: lower one chunked decode
+            # round (serve.make_chunked_decode_loop) — per-slot batch-1
+            # states at independent positions, slot axis folded over DP,
+            # one host transfer per chunk.  Chunk budget comes from
+            # --decode-loop (default 8 steps).
+            from repro.serve import make_chunked_decode_loop
+            chunk = decode_loop if decode_loop >= 1 else 8
+            specs = slot_pool_specs(model, cell, rules, mesh, continuous)
+            pool_abs, tok_abs, live_abs, made_abs, fresh_abs, mn_abs, \
+                eos_abs = specs
+            loop_fn = make_chunked_decode_loop(
+                model, chunk, cim,
+                spmd_axes=shd.slot_spmd_axes(rules, mesh, continuous))
+            lowered = loop_fn.lower(params_abs, tok_abs, pool_abs,
+                                    live_abs, made_abs, fresh_abs,
+                                    mn_abs, eos_abs)
+            # at most `chunk` tokens per slot per scheduling round
+            tokens = continuous * chunk
+            meta["continuous_slots"] = continuous
+            meta["chunk"] = chunk
+        elif decode_loop:
             # the serving fast lane: lower the whole on-device
             # lax.while_loop decode body (one host transfer per bucket)
             # instead of a single step — proves the loop-carried cache +
             # live-mask graph compiles against the production mesh
+            cache_abs = abstract_cache(model, cell, rules, mesh)
             if decode_loop < 2:
                 raise ValueError("--decode-loop needs >= 2: slot 0 of the "
                                  "token buffer is the prefill token passed "
@@ -163,6 +185,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             tokens = cell.global_batch * (decode_loop - 1)
             meta["decode_loop"] = decode_loop
         else:
+            cache_abs = abstract_cache(model, cell, rules, mesh)
             token_abs = decode_token_spec(cell, rules, mesh)
 
             def serve_step(params, token, state):
@@ -267,6 +290,10 @@ def main(argv=None):
     p.add_argument("--decode-loop", type=int, default=0,
                    help="decode cells: lower the on-device decode loop "
                         "with this max-new budget instead of one step")
+    p.add_argument("--continuous", type=int, default=0, metavar="SLOTS",
+                   help="decode cells: lower one chunked round of the "
+                        "continuous-batching slot pool with this many "
+                        "slots (chunk budget = --decode-loop, default 8)")
     p.add_argument("--out-dir", default=DEFAULT_OUT)
     p.add_argument("--tag", default=None,
                    help="suffix for the output file (perf experiments)")
@@ -285,7 +312,8 @@ def main(argv=None):
                        fsdp=not args.no_fsdp, remat=args.remat,
                        opt_name=args.opt, ep=args.ep, sp=args.sp,
                        pure_dp=args.pure_dp, kv_cache=args.kv_cache,
-                       decode_loop=args.decode_loop)
+                       decode_loop=args.decode_loop,
+                       continuous=args.continuous)
     except Exception:
         traceback.print_exc()
         sys.exit(1)

@@ -110,3 +110,21 @@ def abstract_cache(model, cell: ShapeCell, rules, mesh):
     defs = model.cache_defs(cell.global_batch, cell.seq_len)
     mk = lambda d: shd.named_sharding(d.axes, d.shape, rules, mesh)
     return abstract_params(defs, model.cfg.dtype, mk)
+
+
+def slot_pool_specs(model, cell: ShapeCell, rules, mesh, slots: int):
+    """Inputs of serve.make_chunked_decode_loop beyond params: the
+    pooled decode state (per-slot batch-1 caches stacked on a leading
+    'slot' axis, folded over the DP mesh axes) and the per-slot control
+    lanes (tok, live, made, fresh, max_new, eos — all (slots,),
+    slot-sharded like the pool)."""
+    defs = model.cache_defs(1, cell.seq_len)
+    pooled = jax.tree.map(
+        lambda d: ParamDef((slots,) + d.shape, ("slot",) + d.axes,
+                           d.init, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    mk = lambda d: shd.named_sharding(d.axes, d.shape, rules, mesh)
+    pool_abs = abstract_params(pooled, model.cfg.dtype, mk)
+    lane = lambda dt: _sds((slots,), dt, ("slot",), rules, mesh)
+    return (pool_abs, lane(jnp.int32), lane(jnp.bool_), lane(jnp.int32),
+            lane(jnp.bool_), lane(jnp.int32), lane(jnp.int32))

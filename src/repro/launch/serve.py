@@ -2,8 +2,23 @@
 packed) model.  The paper's end-to-end mode: weights stored at 1 byte /
 5-trit weight (base3) or 2 bits/trit (trit2) and dequantized on-load.
 
+Two drivers:
+  * bucket (default) — ServeEngine pops one prompt-length bucket at a
+    time (on-device decode loop per bucket);
+  * ``--continuous`` — the continuous-batching Scheduler: a persistent
+    pool of ``--slots`` decode slots, chunked on-device decode
+    (``--chunk`` steps per host yield) with prefill-into-freed-slot
+    admission.
+
+Request streams: all-at-once (default), a Poisson arrival stream
+(``--arrival-rate`` requests/s), or a recorded JSON trace
+(``--trace-file``: list of {arrival_s, prompt_len, max_new, eos_id}).
+With an arrival stream both drivers replay the same trace, so their
+latency percentiles are comparable.
+
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-      --smoke --requests 16 --prompt-len 32 --max-new 16 --packed base3
+      --smoke --requests 16 --prompt-len 32 --max-new 16 --packed base3 \
+      --continuous --slots 8 --chunk 8 --arrival-rate 50
 """
 from __future__ import annotations
 
@@ -30,13 +45,29 @@ def main(argv=None):
     p.add_argument("--legacy-loop", action="store_true",
                    help="per-step decode driver (one host sync per token) "
                         "instead of the on-device lax.while_loop")
+    p.add_argument("--continuous", action="store_true",
+                   help="continuous-batching Scheduler (slot pool + "
+                        "chunked decode) instead of the bucket engine")
+    p.add_argument("--slots", type=int, default=0,
+                   help="decode slots for --continuous (default: "
+                        "--max-batch)")
+    p.add_argument("--chunk", type=int, default=8,
+                   help="decode steps per scheduling round (host yield)")
+    p.add_argument("--arrival-rate", type=float, default=0.0,
+                   help="Poisson request arrivals per second (0 = all "
+                        "requests available at t=0)")
+    p.add_argument("--trace-file", default=None,
+                   help="JSON arrival trace: list of {arrival_s, "
+                        "prompt_len, max_new, eos_id} (overrides "
+                        "--requests/--prompt-len/--max-new/--arrival-rate)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     from repro import configs
     from repro.core.cim_linear import CIMConfig, hbm_bytes, ternarize_params
     from repro.models import registry
-    from repro.serve import Request, ServeEngine
+    from repro.serve import (Request, Scheduler, ServeEngine, latency_stats,
+                             load_trace, make_trace, poisson_arrivals)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     model = registry.build(cfg)
@@ -60,28 +91,59 @@ def main(argv=None):
         extra["patches"] = lambda b: jnp.zeros(
             (b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
 
-    eng = ServeEngine(model, params, capacity=args.capacity,
-                      max_batch=args.max_batch, cim=cim, extra_inputs=extra,
-                      on_device_loop=not args.legacy_loop)
+    if args.trace_file:
+        trace = load_trace(args.trace_file)
+    else:
+        arrivals = poisson_arrivals(args.requests, args.arrival_rate,
+                                    seed=args.seed)
+        trace = make_trace(arrivals, [args.prompt_len], [args.max_new])
+
+    if args.continuous:
+        eng = Scheduler(model, params, capacity=args.capacity,
+                        slots=args.slots or args.max_batch,
+                        chunk=args.chunk, cim=cim, extra_inputs=extra)
+    else:
+        eng = ServeEngine(model, params, capacity=args.capacity,
+                          max_batch=args.max_batch, cim=cim,
+                          extra_inputs=extra,
+                          on_device_loop=not args.legacy_loop)
+
     key = jax.random.key(args.seed + 1)
-    for i in range(args.requests):
+    for i, rec in enumerate(trace):
         k = jax.random.fold_in(key, i)
-        prompt = jax.random.randint(k, (args.prompt_len,), 0,
+        prompt = jax.random.randint(k, (rec["prompt_len"],), 0,
                                     cfg.vocab_size)
-        eng.submit(Request(uid=i, prompt=prompt, max_new=args.max_new))
+        eng.submit(Request(uid=i, prompt=prompt, max_new=rec["max_new"],
+                           eos_id=rec["eos_id"],
+                           arrival_s=rec["arrival_s"]))
 
     t0 = time.monotonic()
-    done = eng.run()
+    if args.continuous:
+        done = eng.run()                      # natively arrival-aware
+    else:
+        # run_trace even when every arrival is 0.0 (no sleeps happen):
+        # it stamps latency_s = completion - arrival, the same
+        # definition the Scheduler uses, so the printed p50/p99 are
+        # comparable across drivers
+        done = eng.run_trace()
     dt = time.monotonic() - t0
-    print(json.dumps({
+
+    out = {
         "requests": len(done),
         "generated_tokens": eng.generated_tokens,
         "steps": eng.steps_run,
         "host_transfers": eng.host_transfers,
-        "decode_loop": "legacy" if args.legacy_loop else "device",
         "wall_s": round(dt, 2),
         "tok_per_s": round(eng.generated_tokens / max(dt, 1e-9), 1),
-    }))
+        **latency_stats(done),
+    }
+    if args.continuous:
+        out.update(decode_loop="continuous", slots=eng.slots,
+                   chunk=eng.chunk, chunks=eng.chunks_run,
+                   slot_occupancy=round(eng.slot_occupancy, 3))
+    else:
+        out["decode_loop"] = "legacy" if args.legacy_loop else "device"
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -1,3 +1,7 @@
-from .engine import (ServeEngine, Request, make_prefill_step,
+from .engine import (ServeEngine, Scheduler, Request, make_prefill_step,
                      make_decode_step, make_decode_loop,
+                     make_chunked_decode_loop, make_admit_fn,
+                     init_slot_pool, latency_stats,
                      greedy_sample)  # noqa: F401
+from .trace import (poisson_arrivals, bursty_arrivals, make_trace,
+                    load_trace)  # noqa: F401

@@ -29,6 +29,32 @@ device->host syncs so the one-transfer-per-bucket contract is testable.
 
 ``make_decode_step`` is the jitted `serve_step` the multi-pod dry-run
 lowers for the decode_32k / long_500k cells.
+
+Continuous batching (``Scheduler``): the bucket engine drains one static
+batch at a time, so decode slots sit empty while long requests finish
+and new arrivals queue behind the whole bucket.  The Scheduler instead
+keeps a persistent pool of ``slots`` decode lanes whose on-device state
+(KV/carry, live-mask, per-slot max-new/EOS budgets) survives across
+scheduling rounds:
+
+  * each slot carries an independent batch-1 decode state stacked on a
+    leading slot axis; ``make_chunked_decode_loop`` advances every slot
+    with a vmapped single-row decode, so slots at DIFFERENT sequence
+    positions coexist in one jitted ``lax.while_loop`` (the batched
+    drivers share one scalar cache position and cannot do this);
+  * the loop runs up to ``chunk`` decode steps, then yields to the host
+    for admission with ONE device->host transfer (the PR 2 invariant,
+    now per chunk instead of per bucket);
+  * admission prefills newly arrived requests and scatters their state
+    into freed slots in-graph (``make_admit_fn``) — compaction is the
+    overwrite, no pool reshape, no extra transfer (the prefill token
+    stays on device and is emitted by the next chunk's prologue);
+  * finished rows are retired host-side from the per-chunk transfer and
+    their slots returned to the free list.
+
+Per-request tokens are bitwise identical to both PR 2 drivers (pinned in
+tests/test_continuous.py): a slot's computation is exactly the batch-1
+decode of that request, and greedy tokens are batch-shape independent.
 """
 from __future__ import annotations
 
@@ -105,31 +131,155 @@ def make_decode_loop(model, max_new: int, cim=None) -> Callable:
     return jax.jit(decode_loop)
 
 
+# =====================================================================
+# continuous batching: slot pool + chunked decode loop
+# =====================================================================
+
+def init_slot_pool(model, slots: int, capacity: int):
+    """Pooled decode state: one batch-1 cache per slot, stacked on a new
+    leading slot axis (logical axis 'slot' in repro.dist — folds over
+    the data-parallel mesh axes like 'batch')."""
+    one = model.init_cache(1, capacity)
+    return jax.tree.map(lambda a: jnp.stack([a] * slots), one)
+
+
+def make_chunked_decode_loop(model, chunk: int, cim=None, spmd_axes=None):
+    """Chunked variant of ``make_decode_loop`` over a slot pool: run up
+    to ``chunk`` decode steps in one jitted ``lax.while_loop``, then
+    yield to the host for admission.
+
+    fn(params, tok (P,), state_pool, live (P,), made (P,), fresh (P,),
+       max_new_row (P,), eos_row (P,)) ->
+        (tok, state_pool, live, made,
+         buf (P, chunk+1) int32, cnt (P,) int32, steps (), occ ())
+
+    Every slot advances with a vmapped batch-1 ``model.decode`` so slots
+    at different positions coexist (each slot state carries its own
+    scalar cache position).  `spmd_axes` threads the physical mesh axes
+    of the slot dim into ``jax.vmap(spmd_axis_name=...)`` so activation
+    constraints inside the model shard the pool over data parallelism
+    (see dist.sharding.slot_spmd_axes).
+
+    Semantics per slot are exactly ``make_decode_loop``'s per row:
+    freshly admitted slots emit their prefill-sampled token at buf[:, 0]
+    (already counted in ``made`` by the admit scatter), live rows append
+    in per-row order at buf[row, cnt[row]], ``made`` tracks the per-slot
+    budget and EOS flips ``live`` in-graph.  ``steps`` is the number of
+    decode steps executed, ``occ`` the live-slot-steps (occupancy
+    accounting); dead/empty slots keep decoding into scratch state, like
+    finished rows in the fixed-batch drivers.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+
+    def decode_one(params, tok, st):
+        logits, st = model.decode(params, tok[None, None], st, cim=cim)
+        return greedy_sample(logits)[0], st
+
+    vdec = jax.vmap(decode_one, in_axes=(None, 0, 0),
+                    spmd_axis_name=spmd_axes)
+
+    def chunk_step(params, tok, state, live, made, fresh, max_new_row,
+                   eos_row):
+        p = tok.shape[0]
+        rows = jnp.arange(p)
+        # prologue: emit the admission tokens of freshly prefilled slots
+        buf = jnp.zeros((p, chunk + 1), jnp.int32)
+        buf = buf.at[:, 0].set(jnp.where(fresh, tok, 0))
+        cnt = fresh.astype(jnp.int32)
+
+        def cond(carry):
+            step, live = carry[0], carry[3]
+            return jnp.any(live) & (step < chunk)
+
+        def body(carry):
+            step, tok, state, live, buf, cnt, made, occ = carry
+            occ = occ + jnp.sum(live.astype(jnp.int32))
+            tok, state = vdec(params, tok, state)
+            buf = buf.at[rows, cnt].set(
+                jnp.where(live, tok, buf[rows, cnt]))
+            cnt = cnt + live.astype(jnp.int32)
+            made = made + live.astype(jnp.int32)
+            live = live & (made < max_new_row) & (tok != eos_row)
+            return step + 1, tok, state, live, buf, cnt, made, occ
+
+        zero = jnp.zeros((), jnp.int32)
+        steps, tok, state, live, buf, cnt, made, occ = jax.lax.while_loop(
+            cond, body, (zero, tok, state, live, buf, cnt, made, zero))
+        return tok, state, live, made, buf, cnt, steps, occ
+
+    # no donation: the while_loop carries the pool state internally, so
+    # XLA cannot alias a donated input into it (same as make_decode_loop)
+    return jax.jit(chunk_step)
+
+
+def make_admit_fn() -> Callable:
+    """Jitted admission scatter: overwrite slot `slot` of the pool with a
+    freshly prefilled batch-1 state and arm its control lanes.  This IS
+    the compaction step — a freed slot is reclaimed by overwriting every
+    state leaf in place; nothing is transferred to the host (tok0 stays
+    on device and the next chunk's prologue emits it)."""
+    def admit(state, tok, live, made, fresh, max_new_row, eos_row,
+              slot, new_state, tok0, max_new, eos_id):
+        state = jax.tree.map(
+            lambda pool, new: pool.at[slot].set(new.astype(pool.dtype)),
+            state, new_state)
+        t0 = tok0[0]
+        tok = tok.at[slot].set(t0)
+        # same initial-liveness rule as the bucket loop: tok0 is token 1
+        made = made.at[slot].set(1)
+        live = live.at[slot].set((1 < max_new) & (t0 != eos_id))
+        fresh = fresh.at[slot].set(True)
+        max_new_row = max_new_row.at[slot].set(max_new)
+        eos_row = eos_row.at[slot].set(eos_id)
+        return state, tok, live, made, fresh, max_new_row, eos_row
+    # donate the pool: admission is a pure scatter, aliased in place
+    return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: Any                      # (S,) int32
     max_new: int = 16
     eos_id: int = -1                 # -1: never
+    arrival_s: float = 0.0           # offset from serve start (traces)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
-    latency_s: float = 0.0
+    latency_s: float = 0.0           # trace runs: completion - arrival
 
 
-class ServeEngine:
-    def __init__(self, model, params, capacity: int = 512,
-                 max_batch: int = 8, cim=None, extra_inputs=None,
-                 on_device_loop: bool = True):
+def _batch_inputs(reqs: list, extra_inputs: dict) -> dict:
+    toks = jnp.stack([jnp.asarray(r.prompt, jnp.int32) for r in reqs])
+    batch = {"tokens": toks}
+    for k, fn in extra_inputs.items():
+        batch[k] = fn(len(reqs))
+    return batch
+
+
+def latency_stats(reqs: list) -> dict:
+    """p50/p99/mean request latency (trace runs: completion - arrival)."""
+    lat = sorted(r.latency_s for r in reqs)
+    if not lat:
+        return {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+    pick = lambda q: lat[min(int(q * (len(lat) - 1) + 0.5), len(lat) - 1)]
+    return {"p50_s": round(pick(0.50), 4), "p99_s": round(pick(0.99), 4),
+            "mean_s": round(sum(lat) / len(lat), 4)}
+
+
+class _EngineBase:
+    """Request bookkeeping shared by the bucket and continuous engines:
+    the queue, the completion list, and the host-transfer counter that
+    both transfer contracts (one per bucket / one per chunk) are tested
+    through."""
+
+    def __init__(self, model, params, capacity: int, cim, extra_inputs):
         self.model = model
         self.params = params
         self.capacity = capacity
-        self.max_batch = max_batch
         self.cim = cim
         self.extra_inputs = extra_inputs or {}
-        self.on_device_loop = on_device_loop
         self._prefill = make_prefill_step(model, capacity, cim)
-        self._decode = make_decode_step(model, cim)
-        self._loops: dict[int, Callable] = {}   # max_new cap -> jitted loop
         self.queue: list[Request] = []
         self.completed: list[Request] = []
         self.steps_run = 0
@@ -138,12 +288,53 @@ class ServeEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    # ------------------------------------------------------------------
     def _device_get(self, x):
-        """All device->host syncs route through here (transfer counting:
-        the on-device loop must do exactly one per bucket)."""
+        """All device->host syncs route through here (transfer
+        counting)."""
         self.host_transfers += 1
         return jax.device_get(x)
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(r.out_tokens) for r in self.completed)
+
+    def _arrival_pump(self, clock, sleep, try_admit, busy, serve_round):
+        """Shared arrival loop for trace serving — the ONE place whose
+        clock semantics both drivers inherit (the serve_continuous
+        bench compares their latencies, so they must not drift):
+        FIFO-sort the queue by (arrival_s, uid), offer arrived requests
+        to `try_admit` (return False to defer — e.g. no free slot),
+        sleep to the next arrival when nothing is `busy`, otherwise run
+        one `serve_round(elapsed)`.  `serve_round` stamps `latency_s`
+        as elapsed() - arrival_s (queue wait included)."""
+        pending = sorted(self.queue, key=lambda r: (r.arrival_s, r.uid))
+        self.queue = []
+        t0 = clock()
+        elapsed = lambda: clock() - t0
+        while pending or busy():
+            now = elapsed()
+            while pending and pending[0].arrival_s <= now:
+                if not try_admit(pending[0]):
+                    break
+                pending.pop(0)
+            if not busy():
+                delay = pending[0].arrival_s - elapsed()
+                if delay > 0:
+                    sleep(delay)
+                continue
+            serve_round(elapsed)
+        return self.completed
+
+
+class ServeEngine(_EngineBase):
+    def __init__(self, model, params, capacity: int = 512,
+                 max_batch: int = 8, cim=None, extra_inputs=None,
+                 on_device_loop: bool = True):
+        super().__init__(model, params, capacity, cim, extra_inputs)
+        self.max_batch = max_batch
+        self.on_device_loop = on_device_loop
+        self._decode = make_decode_step(model, cim)
+        self._loops: dict[int, Callable] = {}   # max_new cap -> jitted loop
 
     def _next_bucket(self) -> list[Request]:
         """Pop up to max_batch queued requests sharing one prompt length
@@ -161,11 +352,7 @@ class ServeEngine:
         return batch
 
     def _batch_inputs(self, reqs: list[Request]) -> dict:
-        toks = jnp.stack([jnp.asarray(r.prompt, jnp.int32) for r in reqs])
-        batch = {"tokens": toks}
-        for k, fn in self.extra_inputs.items():
-            batch[k] = fn(len(reqs))
-        return batch
+        return _batch_inputs(reqs, self.extra_inputs)
 
     def _decode_loop_for(self, max_new: int) -> Callable:
         # bucket the static loop width up to a power of two: max_new is
@@ -232,6 +419,147 @@ class ServeEngine:
                 self.completed.append(r)
         return self.completed
 
+    def run_trace(self, clock=time.monotonic, sleep=time.sleep
+                  ) -> list[Request]:
+        """Replay arrival-stamped requests through the bucket driver
+        (the shared ``_arrival_pump``): a request becomes visible at
+        its ``arrival_s``; each round serves ONE bucket of whatever has
+        arrived, so new arrivals can only be admitted at bucket
+        boundaries — the baseline the continuous Scheduler is
+        benchmarked against."""
+        run_bucket = (self._run_bucket_device if self.on_device_loop
+                      else self._run_bucket_legacy)
+
+        def admit(req):
+            self.queue.append(req)
+            return True
+
+        def serve_round(elapsed):
+            reqs = self._next_bucket()
+            run_bucket(reqs)
+            done_t = elapsed()
+            for r in reqs:
+                r.done = True
+                r.latency_s = done_t - r.arrival_s
+                self.completed.append(r)
+
+        return self._arrival_pump(clock, sleep, admit,
+                                  lambda: bool(self.queue), serve_round)
+
+
+class Scheduler(_EngineBase):
+    """Continuous-batching serve scheduler over a persistent slot pool.
+
+    ``slots`` decode lanes live on device across scheduling rounds; each
+    round runs one chunked decode loop (up to ``chunk`` steps, ONE
+    device->host transfer), retires finished slots host-side from that
+    transfer, and prefills newly arrived requests into the freed slots
+    before the next round (interleaved prefill/decode).  Requests are
+    admitted FIFO by ``arrival_s`` (then uid), so no request starves:
+    every free slot is offered to the oldest arrived request first.
+
+    Transfer accounting: ``host_transfers == chunks_run`` — admission
+    and compaction stay on device, and a saturated uniform workload runs
+    exactly ceil(decode_steps / chunk) chunks (pinned in
+    tests/test_continuous.py).
+
+    `spmd_axes` (from dist.sharding.slot_spmd_axes) shards the slot axis
+    over the data-parallel mesh axes inside the chunked loop; off-mesh
+    (the default) it is None and the pool is a plain leading axis.
+    """
+
+    def __init__(self, model, params, capacity: int = 512, slots: int = 8,
+                 chunk: int = 8, cim=None, extra_inputs=None,
+                 spmd_axes=None, clock=time.monotonic,
+                 sleep=time.sleep):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        super().__init__(model, params, capacity, cim, extra_inputs)
+        self.slots = slots
+        self.chunk = chunk
+        self._clock = clock
+        self._sleep = sleep
+        self._chunk_fn = make_chunked_decode_loop(model, chunk, cim,
+                                                  spmd_axes)
+        self._admit_fn = make_admit_fn()
+        # device-side pool: per-slot state + control lanes
+        self.pool = init_slot_pool(model, slots, capacity)
+        self.tok = jnp.zeros((slots,), jnp.int32)
+        self.live = jnp.zeros((slots,), jnp.bool_)
+        self.made = jnp.zeros((slots,), jnp.int32)
+        self.fresh = jnp.zeros((slots,), jnp.bool_)
+        self.max_new_row = jnp.ones((slots,), jnp.int32)
+        self.eos_row = jnp.full((slots,), -1, jnp.int32)
+        # host-side bookkeeping
+        self._slot_req: list[Optional[Request]] = [None] * slots
+        self.chunks_run = 0
+        self.decode_steps = 0
+        self.occupied_slot_steps = 0
+
+    def _admit(self, req: Request, slot: int):
+        """Prefill one request and scatter its state into `slot` —
+        entirely on device (tok0 is emitted by the next chunk)."""
+        tok0, st = self._prefill(self.params,
+                                 _batch_inputs([req], self.extra_inputs))
+        self.steps_run += 1
+        (self.pool, self.tok, self.live, self.made, self.fresh,
+         self.max_new_row, self.eos_row) = self._admit_fn(
+            self.pool, self.tok, self.live, self.made, self.fresh,
+            self.max_new_row, self.eos_row,
+            jnp.asarray(slot, jnp.int32), st, tok0,
+            jnp.asarray(req.max_new, jnp.int32),
+            jnp.asarray(req.eos_id, jnp.int32))
+        self._slot_req[slot] = req
+
+    def run(self) -> list[Request]:
+        """Serve the whole queue continuously (the shared
+        ``_arrival_pump``); returns completed requests."""
+        def admit(req):
+            # oldest arrived request into the first free slot, FIFO;
+            # defer admission (False) when the pool is full
+            free = [i for i, r in enumerate(self._slot_req) if r is None]
+            if not free:
+                return False
+            self._admit(req, free[0])
+            return True
+
+        def busy():
+            return any(r is not None for r in self._slot_req)
+
+        def serve_round(elapsed):
+            # one scheduling round: <= chunk decode steps on device,
+            # then ONE transfer carrying everything the host needs
+            occupied = [i for i, r in enumerate(self._slot_req)
+                        if r is not None]
+            (self.tok, self.pool, self.live, self.made, buf, cnt, steps,
+             occ) = self._chunk_fn(
+                self.params, self.tok, self.pool, self.live, self.made,
+                self.fresh, self.max_new_row, self.eos_row)
+            self.fresh = jnp.zeros((self.slots,), jnp.bool_)
+            buf_h, cnt_h, live_h, steps_h, occ_h = self._device_get(
+                (buf, cnt, self.live, steps, occ))
+            self.chunks_run += 1
+            self.decode_steps += int(steps_h)
+            self.steps_run += int(steps_h)
+            self.occupied_slot_steps += int(occ_h)
+            done_t = elapsed()
+            for s in occupied:
+                req = self._slot_req[s]
+                req.out_tokens.extend(
+                    int(t) for t in buf_h[s, : int(cnt_h[s])])
+                if not bool(live_h[s]):        # retire: slot freed for
+                    req.done = True            # the next admission round
+                    req.latency_s = done_t - req.arrival_s
+                    self.completed.append(req)
+                    self._slot_req[s] = None
+
+        return self._arrival_pump(self._clock, self._sleep, admit, busy,
+                                  serve_round)
+
     @property
-    def generated_tokens(self) -> int:
-        return sum(len(r.out_tokens) for r in self.completed)
+    def slot_occupancy(self) -> float:
+        """Fraction of (slot x decode-step) cells that held a live
+        request — the utilization the continuous scheduler exists to
+        maximize."""
+        total = self.slots * self.decode_steps
+        return self.occupied_slot_steps / total if total else 0.0

@@ -1,0 +1,70 @@
+"""Arrival traces for the serving engines.
+
+A trace is a list of per-request dicts ``{"arrival_s", "prompt_len",
+"max_new", "eos_id"}`` — what both drivers consume: the bucket engine
+via ``ServeEngine.run_trace`` and the continuous ``Scheduler`` natively.
+Generators here are deterministic (``random.Random(seed)``) so the bench
+and the CLI replay identical workloads across runs; ``load_trace`` reads
+the same shape from a JSON file for recorded production streams.
+"""
+from __future__ import annotations
+
+import json
+import random
+
+
+def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0
+                     ) -> list[float]:
+    """n arrival offsets with exponential inter-arrival gaps (a Poisson
+    stream of `rate_per_s` requests/second)."""
+    if rate_per_s <= 0:
+        return [0.0] * n
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.expovariate(rate_per_s)
+        out.append(round(t, 6))
+    return out
+
+
+def bursty_arrivals(n: int, bursts: int = 2, gap_s: float = 0.25,
+                    spread_s: float = 0.02, seed: int = 0) -> list[float]:
+    """n arrivals in `bursts` tight clusters `gap_s` apart — the adverse
+    pattern for bucket-at-a-time serving: a whole burst queues behind
+    the bucket currently draining."""
+    rng = random.Random(seed)
+    out = []
+    per = -(-n // bursts)
+    for i in range(n):
+        base = (i // per) * gap_s
+        out.append(round(base + rng.uniform(0.0, spread_s), 6))
+    return sorted(out)
+
+
+def make_trace(arrivals: list[float], prompt_lens, max_news,
+               eos_id: int = -1) -> list[dict]:
+    """Zip arrival offsets with cycled prompt-length / max-new menus
+    into the canonical trace records."""
+    return [{"arrival_s": a,
+             "prompt_len": prompt_lens[i % len(prompt_lens)],
+             "max_new": max_news[i % len(max_news)],
+             "eos_id": eos_id}
+            for i, a in enumerate(arrivals)]
+
+
+def load_trace(path: str) -> list[dict]:
+    """JSON trace file: a list of request records; missing fields get
+    the generator defaults."""
+    with open(path) as f:
+        raw = json.load(f)
+    if not isinstance(raw, list):
+        raise ValueError(f"trace file {path}: expected a JSON list")
+    out = []
+    for i, rec in enumerate(raw):
+        if not isinstance(rec, dict):
+            raise ValueError(f"trace file {path}[{i}]: expected an object")
+        out.append({"arrival_s": float(rec.get("arrival_s", 0.0)),
+                    "prompt_len": int(rec.get("prompt_len", 32)),
+                    "max_new": int(rec.get("max_new", 16)),
+                    "eos_id": int(rec.get("eos_id", -1))})
+    return out

@@ -56,6 +56,33 @@ def test_serve_rules_shard_cache_seq():
     assert s == P(None, "data", "model")
 
 
+def test_slot_pool_folds_over_dp_axes():
+    """Continuous-batching slot pool: the leading 'slot' axis shards
+    like 'batch' (over DP), the per-slot inner batch of 1 replicates,
+    and cache_seq keeps its serve-mode TP sharding."""
+    r = shd.serve_rules()
+    s = shd.logical_to_spec(
+        ("slot", "layers", "batch", "cache_seq", "kv", "none"),
+        (32, 40, 1, 32768, 8, 128), r, POD)
+    assert s == P(("pod", "data"), None, None, "model")
+
+
+def test_slot_spmd_axes_resolution():
+    # 32 slots on the pod mesh: folds over both DP axes
+    assert shd.slot_spmd_axes(shd.serve_rules(), POD, 32) == \
+        ("pod", "data")
+    # 16 slots: 2x16 does not divide -> trailing-drop to pod only? no:
+    # folding drops TRAILING axes, so ('pod','data') -> ('pod',) when
+    # 16 % (2*16) != 0 but 16 % 2 == 0
+    assert shd.slot_spmd_axes(shd.serve_rules(), POD, 16) == "pod"
+    assert shd.slot_spmd_axes(shd.serve_rules(), MESH, 32) == "data"
+    # indivisible pool replicates (None) rather than failing under vmap
+    assert shd.slot_spmd_axes(shd.serve_rules(), MESH, 3) is None
+    # replicated-slot override
+    r = shd.serve_rules().with_overrides(slot=None)
+    assert shd.slot_spmd_axes(r, MESH, 32) is None
+
+
 def test_fsdp_off_replicates_embed():
     r = shd.train_rules(fsdp=False)
     assert spec(("embed", "mlp"), (4096, 14336), r) == P(None, "model")

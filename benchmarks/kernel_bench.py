@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packing import packed_bytes
-from repro.kernels import ops, ref
+from repro.kernels import execute, ops, plan_matmul, ref
 from repro.kernels.ternary_matmul import (_vmem_working_set,
                                           select_block_shapes)
 
@@ -51,8 +51,13 @@ def run(verbose=True) -> dict:
         x = jax.random.normal(kx, (m, k), jnp.float32)
         w = jax.random.normal(kw, (k, n), jnp.float32)
         pw = ops.pack_weights(w, mode)
-        y_kernel = ops.ternary_matmul(x, pw, interpret=True)
-        y_xla = ops.ternary_matmul(x, pw, backend="xla")
+        # one plan per backend, same (shape, packing) request: the
+        # registry sweep the parity contract is stated over
+        y_kernel = execute(plan_matmul((m, k, n), packing=mode,
+                                       backend="pallas", interpret=True),
+                           x, pw)
+        y_xla = execute(plan_matmul((m, k, n), packing=mode,
+                                    backend="xla"), x, pw)
         y_oracle = ref.ternary_matmul_ref(x, pw.data, pw.scale, mode)
         err = float(jnp.max(jnp.abs(y_kernel - y_oracle)) /
                     (jnp.max(jnp.abs(y_oracle)) + 1e-9))

@@ -31,11 +31,16 @@ TOP_LEVEL = {
 
 # wallclock per-shape-cell required keys
 WALLCLOCK_CELL = {
-    "phase", "m", "k", "n", "mode", "blocks_adaptive", "blocks_fixed",
+    "phase", "m", "k", "n", "mode", "plan", "plan_int8",
+    "blocks_adaptive", "blocks_fixed",
     "flops_ideal", "flops_padded_adaptive", "flops_padded_fixed",
     "flop_waste_adaptive", "flop_waste_fixed", "flop_waste_reduction",
     "hbm_bytes_adaptive", "hbm_bytes_fixed",
 }
+
+# each cell's resolved-plan record (kernels.ExecutionPlan.describe):
+# which backend/domain/blocks actually produced the step timings
+WALLCLOCK_PLAN = {"backend", "domain", "packing", "blocks"}
 
 # wallclock serve_continuous section: the continuous-vs-bucket artifact
 # contract (ROADMAP §Performance)
@@ -69,6 +74,18 @@ def validate(name: str, payload: dict) -> list[str]:
             if miss:
                 errors.append(f"wallclock shapes[{i}]: missing "
                               f"{sorted(miss)}")
+            for pk in ("plan", "plan_int8"):
+                if pk not in cell:
+                    continue               # absence reported above
+                rec = cell[pk]
+                if not isinstance(rec, dict):
+                    errors.append(f"wallclock shapes[{i}].{pk}: expected "
+                                  f"object, got {type(rec).__name__}")
+                    continue
+                pmiss = WALLCLOCK_PLAN - rec.keys()
+                if pmiss:
+                    errors.append(f"wallclock shapes[{i}].{pk}: missing "
+                                  f"{sorted(pmiss)}")
         if not payload.get("shapes"):
             errors.append("wallclock: empty shapes sweep")
         sc = payload.get("serve_continuous")

@@ -18,7 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import execute, ops, plan_matmul
 from repro.kernels.ternary_matmul import (DEFAULT_BLOCKS, TRIT2_PER_BYTE,
                                           _round_up, select_block_shapes)
 
@@ -60,8 +60,15 @@ def shape_cell(m: int, k: int, n: int, mode: str, phase: str,
     adaptive_int8 = select_block_shapes(m, k, n, mode, domain="int8")
     fixed = DEFAULT_BLOCKS
     ideal = 2 * m * k * n
+    # resolve the plans this cell actually executes (and record them:
+    # the artifact must say which backend/domain/blocks produced each
+    # step_time_s, not leave it implied by the host platform)
+    plan_f = plan_matmul((m, k, n), phase, backend=backend, packing=mode)
+    plan_i8 = plan_matmul((m, k, n), phase, backend=backend, packing=mode,
+                          domain="int8")
     cell = {
         "phase": phase, "m": m, "k": k, "n": n, "mode": mode,
+        "plan": plan_f.describe(), "plan_int8": plan_i8.describe(),
         "blocks_adaptive": list(adaptive), "blocks_fixed": list(fixed),
         "blocks_adaptive_int8": list(adaptive_int8),
         "flops_ideal": ideal,
@@ -88,10 +95,8 @@ def shape_cell(m: int, k: int, n: int, mode: str, phase: str,
         # jit the whole step (a serving model runs these compiled):
         # eager per-op dispatch would dominate the small decode shapes
         # and make the baseline trivially beatable by adding jax.jit
-        step = jax.jit(functools.partial(ops.ternary_matmul,
-                                         backend=backend))
-        step_int8 = jax.jit(functools.partial(ops.ternary_matmul_int8,
-                                              backend=backend))
+        step = jax.jit(functools.partial(execute, plan_f))
+        step_int8 = jax.jit(functools.partial(execute, plan_i8))
         cell["step_time_s"] = time_fn(step, x, pw)
         cell["step_time_s_int8"] = time_fn(step_int8, x, pw)
     return cell

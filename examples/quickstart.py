@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import cim, ternary
 from repro.core.yield_model import tl_restore_yield
-from repro.kernels import ops
+from repro.kernels import execute, ops, plan_matmul, shape_of
 
 key = jax.random.key(0)
 kx, kw = jax.random.split(key)
@@ -35,9 +35,14 @@ print(f"CIM macro (16-row groups + 5-bit ADC) vs float matmul: "
       f"rel err {err:.4f}")
 
 # -- 3. packed-ternary fast path (the TPU density mechanism) --------------
+# resolve an ExecutionPlan per backend once, then execute: the same
+# ternary MAC contract served by the pallas kernel and the xla path
 pw = ops.pack_weights(w, "base3")                 # per-column scales
-y_kernel = ops.ternary_matmul(x, pw, interpret=True)
-y_oracle = ops.ternary_matmul(x, pw, backend="xla")
+plan_pallas = plan_matmul(shape_of(x, pw), backend="pallas")
+plan_xla = plan_matmul(shape_of(x, pw), backend="xla")
+print(f"plan: {plan_pallas}")
+y_kernel = execute(plan_pallas, x, pw)
+y_oracle = execute(plan_xla, x, pw)
 print(f"packed base3: {w.nbytes} B float -> {pw.data.nbytes} B packed "
       f"({w.nbytes / pw.data.nbytes:.1f}x denser than f32); Pallas kernel "
       f"vs oracle err {float(jnp.max(jnp.abs(y_kernel - y_oracle))):.2e}")

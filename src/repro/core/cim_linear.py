@@ -22,35 +22,77 @@ import jax
 import jax.numpy as jnp
 
 
+MODES = ("float", "ternary", "exact")
+
+
 @dataclasses.dataclass(frozen=True)
 class CIMConfig:
+    """Execution-mode config: a plan *request* for the kernel layer.
+
+    The routing fields (backend/domain/packing/interpret) are exactly
+    the request half of a ``kernels.ExecutionPlan`` — ``linear`` feeds
+    them to ``kernels.plan_matmul`` per shape.  ``resolve()`` pins the
+    'auto' fields once against the backend registry; long-lived drivers
+    (serve engines, train steps, launchers) resolve at construction so
+    a bad request fails there, not mid-decode.
+    """
     mode: str = "float"            # float | ternary | exact
     packing: str = "base3"         # base3 | trit2 (ternary mode)
     num_trits: int = 5
     adc_bits: int = 5              # exact mode
     restore_yield: Optional[tuple] = None   # per-state yields -> error inject
     interpret: Optional[bool] = None
-    backend: str = "auto"          # auto (pallas) | xla — ternary mode
+    backend: str = "auto"          # any registered kernel backend
     domain: str = "float"          # float | int8 — ternary-mode MXU domain
 
+    def plan_request(self) -> dict:
+        """The fields this config contributes to plan resolution."""
+        return {"backend": self.backend, "domain": self.domain,
+                "packing": self.packing, "interpret": self.interpret}
 
-def linear(x: jax.Array, w: Any, cfg: CIMConfig = CIMConfig()) -> jax.Array:
+    def resolve(self) -> "CIMConfig":
+        """Pin 'auto' routing fields against the kernel backend registry
+        (capability-checked, fails loudly on an incapable backend)."""
+        from repro.kernels import default_interpret, resolve_backend
+        if self.mode not in MODES:
+            raise ValueError(f"unknown cim mode {self.mode!r}; expected "
+                             f"one of {sorted(MODES)}")
+        backend = self.backend
+        if self.mode == "ternary":
+            backend = resolve_backend("ternary", self.backend, self.domain,
+                                      self.packing).name
+        elif self.mode == "exact":
+            backend = resolve_backend("cim", self.backend).name
+        interpret = (default_interpret() if self.interpret is None
+                     else self.interpret)
+        return dataclasses.replace(self, backend=backend,
+                                   interpret=interpret)
+
+
+def linear(x: jax.Array, w: Any, cfg: CIMConfig = CIMConfig(),
+           phase: str = "auto") -> jax.Array:
     """Apply a linear layer under the configured CIM mode.
 
     `w` is a float (K, N) array in float/exact modes, or a
-    kernels.ops.PackedTernary in ternary mode."""
-    from repro.kernels import ops
+    kernels.ops.PackedTernary in ternary mode.  Ternary/exact modes
+    resolve a (cached) ExecutionPlan per shape and run
+    ``kernels.execute`` — backend selection is a capability match in
+    the kernel registry, not an if/elif chain here."""
+    from repro.kernels import execute, ops, plan_matmul, shape_of
     if cfg.mode == "ternary" or isinstance(w, ops.PackedTernary):
         pw = w if isinstance(w, ops.PackedTernary) else ops.pack_weights(
             w, cfg.packing, cfg.num_trits)
-        return ops.ternary_matmul(x, pw, interpret=cfg.interpret,
-                                  backend=cfg.backend, domain=cfg.domain)
+        plan = plan_matmul(shape_of(x, pw), phase, cfg, packing=pw.mode)
+        return execute(plan, x, pw)
     if cfg.mode == "float":
         return x @ w
     if cfg.mode == "exact":
-        return ops.cim_matmul(x, w, adc_bits=cfg.adc_bits,
-                              num_trits=cfg.num_trits, interpret=cfg.interpret)
-    return x @ w
+        plan = plan_matmul(shape_of(x, w), phase, cfg, op="cim",
+                           packing="base3", domain="float",
+                           adc_bits=cfg.adc_bits, num_trits=cfg.num_trits)
+        return execute(plan, x, w)
+    raise ValueError(f"unknown cim mode {cfg.mode!r}; expected one of "
+                     f"{sorted(MODES)}")
 
 
 def ternarize_params(params: Any, cfg: CIMConfig,

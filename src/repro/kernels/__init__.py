@@ -1,3 +1,34 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Compute kernels for the paper's hot spot (the ternary MAC).
+
+Public API (see README.md in this directory):
+
+  * ``plan_matmul``/``execute`` + ``ExecutionPlan`` — resolve-once
+    capability-based kernel dispatch (kernels.plan).
+  * ``register_backend``/``BackendSpec`` — the backend registry; the
+    built-ins (pallas, xla, ref) register from kernels.backends.
+  * ``PackedTernary``/``pack_weights``/``quantize_acts_int8`` — weight
+    packing and activation quantization (kernels.ops).
+  * ``ops.ternary_matmul``/``ops.ternary_matmul_int8``/``ops.cim_matmul``
+    — deprecated kwarg-routed shims over plan/execute.
+  * ``ref`` — pure-jnp oracles (the correctness contract).
+
+The public surface of this package is pinned by
+tests/test_api_surface.py against tests/api_manifest.json.
+"""
+from . import ops, ref                                    # noqa: F401
+from . import backends as _backends                       # noqa: F401
+from .ops import (PackedTernary, pack_weights,            # noqa: F401
+                  quantize_acts_int8)
+from .plan import (BackendSpec, ExecutionPlan,            # noqa: F401
+                   backend_names, check_choice, default_interpret,
+                   execute, get_backend, plan_cache_clear,
+                   plan_cache_info, plan_matmul, register_backend,
+                   resolve_backend, shape_of, unregister_backend)
+
+__all__ = [
+    "BackendSpec", "ExecutionPlan", "PackedTernary", "backend_names",
+    "check_choice", "default_interpret", "execute", "get_backend",
+    "ops", "pack_weights", "plan_cache_clear", "plan_cache_info",
+    "plan_matmul", "quantize_acts_int8", "ref", "register_backend",
+    "resolve_backend", "shape_of", "unregister_backend",
+]

@@ -1,41 +1,44 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Packed-weight containers, quantizers, and the legacy jit'd wrappers.
 
-``interpret`` defaults to True on CPU (the validation environment) and
-False on TPU.  All wrappers accept/return standard JAX arrays and handle
-quantization & packing, so model code can treat them as drop-in matmuls.
+The kernel layer's public API is the plan/registry pair in
+``kernels.plan`` (see src/repro/kernels/README.md):
+
+    plan = plan_matmul(shape_of(x, pw), cfg=cim_cfg)   # resolve once
+    y = execute(plan, x, pw)                           # run anywhere
+
+``ternary_matmul`` / ``ternary_matmul_int8`` / ``cim_matmul`` below are
+thin deprecation shims over that API: the old routing kwargs
+(``backend=``, ``domain=``, ``interpret=``, ``bm/bn/bk``) still work
+but emit a ``DeprecationWarning`` — backend selection now lives in the
+capability registry, not in per-call if/elif chains, and the platform
+probe for ``interpret`` is evaluated once per resolved plan instead of
+on every wrapper invocation.
 
 PackedTernary is a registered pytree (data/scale are children, the
 packing mode is static aux), so packed weights flow through jit, scan
 slicing (models scan over a leading layer axis) and the dry-run's
 ShapeDtypeStruct lowering.
 
-Two execution backends implement the same contract:
-  pallas — kernels/ternary_matmul.py (VMEM dequant-on-load); the real
-           TPU path, validated on CPU in interpret mode.
-  xla    — fused jnp dequant + dot.  Used by the dry-run (Pallas TPU
-           kernels cannot lower on the CPU host platform) so the packed
-           uint8 weight reads show up faithfully in the memory-roofline
-           term.  tests/test_kernels.py asserts pallas == xla == oracle.
+The xla implementation functions (``ternary_matmul_xla``,
+``ternary_matmul_int8_xla``) remain importable: they are the 'xla'
+backend's runners and the dry-run's lowering path (Pallas TPU kernels
+cannot lower on the CPU host platform, and the packed uint8 weight
+reads must show up faithfully in the memory-roofline term).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.packing import pack_trit_planes_base3, pack_trits2
-from repro.core.ternary import encode_inputs, ternarize, trit_range
-from . import cim_mac as _cim_mac_kernel
-from . import ternary_matmul as _tm_kernel
+from repro.core.ternary import ternarize, trit_range
+from .plan import (PACKINGS, check_choice, execute, plan_matmul,
+                   shape_of)
 
 TRIT2_PER_BYTE = 4
 BASE3_OFFSET = trit_range(5)        # 121
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @jax.tree_util.register_pytree_node_class
@@ -83,11 +86,12 @@ def pack_weights(w: jax.Array, mode: str = "base3",
     """Quantize a float (..., K, N) weight with the paper's truncating flow
     and pack for HBM-dense storage (per-output-column scales).  A leading
     stack axis (scan-over-layers weights) is supported."""
+    check_choice("packing mode", mode, PACKINGS)
     if mode == "base3":
         tt = ternarize(w, num_trits, axis=-2, method="truncate")
         data = pack_trit_planes_base3(tt.trits)          # (..., K, N) uint8
         scale = jnp.squeeze(tt.scale, axis=-2)           # (..., N)
-    elif mode == "trit2":
+    else:
         # single-trit weights: w ~ scale * t, t in {-1,0,1}; threshold at
         # 0.75 * mean|w| per column (standard TWN choice).
         absw = jnp.abs(w)
@@ -103,8 +107,6 @@ def pack_weights(w: jax.Array, mode: str = "base3",
             t = jnp.pad(t, pad)
         tk = jnp.moveaxis(t.astype(jnp.int8), -2, 0)     # (K, ..., N)
         data = jnp.moveaxis(pack_trits2(tk), 0, -2)      # (..., K/4, N)
-    else:
-        raise ValueError(mode)
     return PackedTernary(data, scale.astype(jnp.float32), mode)
 
 
@@ -175,80 +177,69 @@ def ternary_matmul_int8_xla(x_int: jax.Array, x_scale: jax.Array,
             * w.scale.astype(jnp.float32)[..., None, :])
 
 
-def ternary_matmul_int8(x: jax.Array, w: PackedTernary, *, interpret=None,
-                        backend: str = "auto", **block_kw) -> jax.Array:
-    """Decode fast lane: quantize x per-row to int8 once, then run the
-    whole matmul in the integer domain (MXU int8 dot, int32 accumulate)
-    with every float scale deferred to the epilogue."""
-    xi, x_scale = quantize_acts_int8(x)
-    if backend == "xla":
-        return ternary_matmul_int8_xla(xi, x_scale, w)
-    if interpret is None:
-        interpret = _default_interpret()
-    lead = x.shape[:-1]
-    xi2 = xi.reshape(-1, xi.shape[-1])
-    xs2 = x_scale.reshape(-1)
-    if w.mode == "trit2" and x.shape[-1] % TRIT2_PER_BYTE:
-        xi2 = jnp.pad(xi2, ((0, 0), (0, -x.shape[-1] % TRIT2_PER_BYTE)))
-    y = _tm_kernel.ternary_matmul_int8(xi2, xs2, w.data, w.scale,
-                                       mode=w.mode, interpret=interpret,
-                                       **block_kw)
-    return y.reshape(*lead, w.data.shape[-1])
+# ------------------------------------------------------ deprecation shims
 
+def _warn_legacy(fn: str, used: dict) -> None:
+    used = {k: v for k, v in used.items() if v is not None}
+    if used:
+        warnings.warn(
+            f"ops.{fn}({', '.join(sorted(used))}=...) routing kwargs are "
+            f"deprecated: resolve an ExecutionPlan once with "
+            f"repro.kernels.plan_matmul and run repro.kernels.execute "
+            f"(src/repro/kernels/README.md has the migration table)",
+            DeprecationWarning, stacklevel=3)
 
-# ---------------------------------------------------------------- dispatch
 
 def ternary_matmul(x: jax.Array, w: PackedTernary, *, interpret=None,
                    backend: str = "auto", domain: str = "float",
-                   **block_kw) -> jax.Array:
+                   bm: int | None = None, bn: int | None = None,
+                   bk: int | None = None) -> jax.Array:
     """x (..., K) @ packed w (K, N) -> (..., N) fp32.
 
-    Block shapes are shape-adaptive by default (see
-    kernels.ternary_matmul.select_block_shapes); pass bm/bn/bk to pin.
-    domain='int8' routes to the int-domain fast lane
-    (:func:`ternary_matmul_int8`).
+    Deprecation shim: equivalent to ``execute(plan_matmul(...), x, w)``;
+    the routing kwargs survive behind a DeprecationWarning.
     """
-    if domain == "int8":
-        return ternary_matmul_int8(x, w, interpret=interpret,
-                                   backend=backend, **block_kw)
-    if domain != "float":
-        raise ValueError(f"unknown domain {domain!r} (float | int8)")
-    if backend == "xla":
-        return ternary_matmul_xla(x, w)
-    if interpret is None:
-        interpret = _default_interpret()
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if w.mode == "trit2" and x.shape[-1] % TRIT2_PER_BYTE:
-        x2 = jnp.pad(x2, ((0, 0), (0, -x.shape[-1] % TRIT2_PER_BYTE)))
-    y = _tm_kernel.ternary_matmul(x2, w.data, w.scale, mode=w.mode,
-                                  interpret=interpret, **block_kw)
-    return y.reshape(*lead, w.data.shape[-1])
+    _warn_legacy("ternary_matmul", {
+        "interpret": interpret, "bm": bm, "bn": bn, "bk": bk,
+        "backend": None if backend == "auto" else backend,
+        "domain": None if domain == "float" else domain})
+    plan = plan_matmul(shape_of(x, w), backend=backend, domain=domain,
+                       packing=w.mode, interpret=interpret,
+                       bm=bm, bn=bn, bk=bk)
+    return execute(plan, x, w)
+
+
+def ternary_matmul_int8(x: jax.Array, w: PackedTernary, *, interpret=None,
+                        backend: str = "auto", bm: int | None = None,
+                        bn: int | None = None,
+                        bk: int | None = None) -> jax.Array:
+    """Decode fast lane: quantize x per-row to int8 once, then run the
+    whole matmul in the integer domain (MXU int8 dot, int32 accumulate)
+    with every float scale deferred to the epilogue.
+
+    Deprecation shim for an int8-domain plan (see ``ternary_matmul``).
+    """
+    _warn_legacy("ternary_matmul_int8", {
+        "interpret": interpret, "bm": bm, "bn": bn, "bk": bk,
+        "backend": None if backend == "auto" else backend})
+    plan = plan_matmul(shape_of(x, w), backend=backend, domain="int8",
+                       packing=w.mode, interpret=interpret,
+                       bm=bm, bn=bn, bk=bk)
+    return execute(plan, x, w)
 
 
 def cim_matmul(x: jax.Array, w: "PackedTernary | jax.Array", *,
                adc_bits: int = 5, num_trits: int = 5, interpret=None,
-               **block_kw) -> jax.Array:
+               bm: int | None = None, bn: int | None = None,
+               bk: int | None = None) -> jax.Array:
     """Macro-exact CIM matmul: float x (..., K) x weight (K, N) -> (..., N).
 
     Accepts a float weight (ternarized on the fly) or a base3 PackedTernary.
+    Deprecation shim for an ``op='cim'`` plan.
     """
-    if interpret is None:
-        interpret = _default_interpret()
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    xt = encode_inputs(x2, num_trits)
-    if isinstance(w, PackedTernary):
-        if w.mode != "base3":
-            raise ValueError("cim_matmul needs base3 (multi-trit) weights")
-        from repro.core.packing import unpack_base3_to_planes
-        w_trits = unpack_base3_to_planes(w.data, num_trits)
-        w_scale = w.scale
-    else:
-        # per-tensor scale: exactly mirrors core.cim.cim_matmul
-        tt = ternarize(w, num_trits)
-        w_trits, w_scale = tt.trits, tt.scale
-    y_int = _cim_mac_kernel.cim_mac(xt.trits, w_trits, adc_bits=adc_bits,
-                                    interpret=interpret, **block_kw)
-    y = y_int.astype(jnp.float32) * xt.scale * w_scale
-    return y.reshape(*lead, w_trits.shape[-1])
+    _warn_legacy("cim_matmul", {"interpret": interpret, "bm": bm,
+                                "bn": bn, "bk": bk})
+    plan = plan_matmul(shape_of(x, w), op="cim", interpret=interpret,
+                       bm=bm, bn=bn, bk=bk, adc_bits=adc_bits,
+                       num_trits=num_trits)
+    return execute(plan, x, w)

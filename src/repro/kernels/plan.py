@@ -1,0 +1,301 @@
+"""Capability-based execution planning for the kernel layer.
+
+Every matmul in the framework resolves ONCE into a frozen, hashable
+:class:`ExecutionPlan` — *what* to compute (op, domain, packing mode,
+problem shape) plus *how* a backend realizes it (backend name, block
+shapes, interpret flag) — and then runs through :func:`execute`.  The
+old routing kwargs (``backend=``, ``domain=``, ``interpret=``,
+``bm/bn/bk``) threaded through ``ops.ternary_matmul`` ->
+``CIMConfig`` -> models -> serve survive only as deprecation shims.
+
+Backends self-describe through :class:`BackendSpec`: the ops they
+implement, the arithmetic domains, packing modes and platforms they
+support, and a priority.  ``backend='auto'`` selects the
+highest-priority capable backend for the current platform instead of
+an if/elif chain; an explicit backend that lacks a capability fails
+loudly with the list of what it *does* support.  The built-in
+backends (pallas, xla, ref) register from ``kernels.backends``.
+
+Resolution is cached per (shape, phase, request) via ``lru_cache``, so
+plan construction inside a jit trace is a dict hit, and the per-call
+platform probe of the old wrappers (``_default_interpret`` on every
+invocation) is evaluated once per plan.
+
+Contract: for any fixed plan, every backend capable of that plan's
+(domain, packing) cell computes the same function — pallas == xla ==
+ref bitwise in the int8 domain, and to f32 round-off in float (see
+tests/test_kernels.py / tests/test_fastlane.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+OPS = ("ternary", "cim")
+DOMAINS = ("float", "int8")
+PACKINGS = ("base3", "trit2")
+PHASES = ("auto", "decode", "prefill")
+
+CIM_DEFAULT_BLOCKS = (128, 128, 128)    # kernels.cim_mac defaults
+
+
+def check_choice(kind: str, value: Any, choices) -> None:
+    """Uniform unknown-name error: every rejected backend/domain/mode
+    string names the valid choices (ISSUE 4 satellite: some entrypoints
+    used to raise bare ``ValueError(mode)``, others fell through)."""
+    if value not in choices:
+        raise ValueError(f"unknown {kind} {value!r}; expected one of "
+                         f"{sorted(choices)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A fully resolved kernel execution: frozen and hashable, so it is
+    a dict/jit-static key.  Produced by :func:`plan_matmul`; consumed by
+    :func:`execute`.
+
+    ``blocks`` is the (bm, bn, bk) tile choice for block-tiled backends
+    (pallas) and None for backends that tile internally (xla, ref).
+    ``interpret`` is resolved once at plan time (True off-TPU).
+    ``phase`` is advisory metadata today (blocks are shape-resolved);
+    it is the seam where paged-KV / autotuned plans specialize later.
+    ``adc_bits`` / ``num_trits`` are set for the macro-exact ``cim`` op
+    only.
+    """
+    op: str                                  # ternary | cim
+    backend: str                             # resolved name (never 'auto')
+    domain: str                              # float | int8
+    packing: str                             # base3 | trit2
+    m: int
+    k: int
+    n: int
+    phase: str = "auto"                      # auto | decode | prefill
+    blocks: Optional[tuple] = None           # (bm, bn, bk) | None
+    interpret: bool = False
+    adc_bits: Optional[int] = None           # cim op only
+    num_trits: Optional[int] = None          # cim op only
+
+    @property
+    def shape(self) -> tuple:
+        return (self.m, self.k, self.n)
+
+    def describe(self) -> dict:
+        """JSON-friendly record of the resolved plan (bench artifacts)."""
+        return {"backend": self.backend, "domain": self.domain,
+                "packing": self.packing, "phase": self.phase,
+                "blocks": list(self.blocks) if self.blocks else None,
+                "interpret": self.interpret}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Capability declaration + runner for one execution backend.
+
+    ``runner(plan, x, w) -> y`` receives the resolved plan; selection
+    never inspects the runner.  ``needs_blocks`` backends get (bm, bn,
+    bk) resolved into the plan (shape-adaptive unless pinned).
+    """
+    name: str
+    ops: frozenset
+    domains: frozenset
+    packings: frozenset
+    platforms: frozenset
+    priority: int
+    runner: Callable
+    needs_blocks: bool = False
+
+    def supports(self, op: str, domain: str, packing: str,
+                 platform: str) -> bool:
+        return (op in self.ops and domain in self.domains
+                and packing in self.packings and platform in self.platforms)
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def _ensure_builtin_backends() -> None:
+    # populate lazily so `import repro.kernels.plan` alone works and the
+    # registry survives partial package initialization
+    if not _REGISTRY:
+        from . import backends  # noqa: F401  (registers on import)
+
+
+def register_backend(spec: BackendSpec, *, override: bool = False) -> None:
+    """Register an execution backend.  Re-registering an existing name
+    requires ``override=True`` (tests swap in capability-limited
+    doubles)."""
+    if spec.name in _REGISTRY and not override:
+        raise ValueError(f"backend {spec.name!r} already registered; "
+                         f"pass override=True to replace it")
+    _REGISTRY[spec.name] = spec
+    plan_cache_clear()        # capabilities changed: cached plans stale
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a backend (test cleanup for registered doubles)."""
+    _REGISTRY.pop(name, None)
+    plan_cache_clear()
+
+
+def backend_names() -> list:
+    _ensure_builtin_backends()
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str) -> BackendSpec:
+    _ensure_builtin_backends()
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{backend_names()}")
+    return _REGISTRY[name]
+
+
+def resolve_backend(op: str = "ternary", backend: str = "auto",
+                    domain: str = "float", packing: str = "base3",
+                    platform: Optional[str] = None) -> BackendSpec:
+    """Capability match: 'auto' picks the highest-priority backend that
+    supports (op, domain, packing) on `platform`; an explicit name is
+    validated against its declared capabilities and fails loudly."""
+    _ensure_builtin_backends()
+    if platform is None:
+        platform = _platform()
+    if backend in (None, "auto"):
+        cands = [s for s in _REGISTRY.values()
+                 if s.supports(op, domain, packing, platform)]
+        if not cands:
+            raise ValueError(
+                f"no registered backend supports op={op!r} domain={domain!r} "
+                f"packing={packing!r} on platform {platform!r}; registered: "
+                f"{backend_names()}")
+        return max(cands, key=lambda s: s.priority)
+    spec = get_backend(backend)
+    for kind, value, have in (("op", op, spec.ops),
+                              ("domain", domain, spec.domains),
+                              ("packing mode", packing, spec.packings),
+                              ("platform", platform, spec.platforms)):
+        if value not in have:
+            raise ValueError(
+                f"backend {backend!r} does not support {kind} {value!r} "
+                f"(supports {sorted(have)}); registered backends: "
+                f"{backend_names()}")
+    return spec
+
+
+def _platform() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def default_interpret(platform: Optional[str] = None) -> bool:
+    """Pallas kernels run in interpret mode off-TPU.  Evaluated once per
+    resolved plan (the old wrappers probed the backend on every call)."""
+    return (platform or _platform()) != "tpu"
+
+
+def shape_of(x, w) -> tuple:
+    """(M, K, N) problem shape of ``x (..., K) @ w (..., K, N)``: M is
+    the flattened leading extent (the kernels run on 2-D views)."""
+    m = 1
+    for d in x.shape[:-1]:
+        m = m * int(d)
+    return (m, int(x.shape[-1]), int(w.shape[-1]))
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve(op, m, k, n, phase, backend, domain, packing, interpret,
+             bm, bn, bk, adc_bits, num_trits, platform) -> ExecutionPlan:
+    check_choice("op", op, OPS)
+    check_choice("phase", phase, PHASES)
+    check_choice("domain", domain, DOMAINS)
+    check_choice("packing mode", packing, PACKINGS)
+    spec = resolve_backend(op, backend, domain, packing, platform)
+    if interpret is None:
+        interpret = default_interpret(platform)
+    blocks = None
+    if spec.needs_blocks:
+        if op == "cim":
+            dm, dn, dk = CIM_DEFAULT_BLOCKS
+        else:
+            from .ternary_matmul import (TRIT2_PER_BYTE,
+                                         select_block_shapes)
+            # the kernel pads trit2 K to a byte multiple before tiling;
+            # select against the extent it will actually see
+            kdim = k + (-k % TRIT2_PER_BYTE) if packing == "trit2" else k
+            dm, dn, dk = select_block_shapes(m, kdim, n, packing,
+                                             domain=domain)
+        blocks = (bm or dm, bn or dn, bk or dk)
+    return ExecutionPlan(op=op, backend=spec.name, domain=domain,
+                         packing=packing, m=m, k=k, n=n, phase=phase,
+                         blocks=blocks, interpret=bool(interpret),
+                         adc_bits=adc_bits, num_trits=num_trits)
+
+
+def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
+                op: str = "ternary", backend: Optional[str] = None,
+                domain: Optional[str] = None, packing: Optional[str] = None,
+                interpret: Optional[bool] = None, bm: Optional[int] = None,
+                bn: Optional[int] = None, bk: Optional[int] = None,
+                adc_bits: Optional[int] = None,
+                num_trits: Optional[int] = None) -> ExecutionPlan:
+    """Resolve an :class:`ExecutionPlan` for a (M, K, N) matmul.
+
+    ``cfg`` is any object carrying plan-request attributes (``backend``,
+    ``domain``, ``packing``, ``interpret`` — e.g. a
+    ``core.cim_linear.CIMConfig``); explicit keyword arguments override
+    it.  Resolution is cached on the full request, so calling this per
+    layer inside a jit trace costs a dict lookup; pass ``bm/bn/bk`` to
+    pin block shapes (tests, sweeps), otherwise block-tiled backends get
+    the shape-adaptive choice.  ``op='cim'`` plans the macro-exact CIM
+    MAC (``adc_bits`` / ``num_trits`` default 5).
+    """
+    m, k, n = (int(s) for s in shape)
+    if cfg is not None:
+        # a config collapses to a plan request through plan_request()
+        # (e.g. CIMConfig); bare attribute carriers work too
+        req = (cfg.plan_request() if hasattr(cfg, "plan_request") else
+               {f: getattr(cfg, f, None)
+                for f in ("backend", "domain", "packing", "interpret")})
+        backend = backend if backend is not None else req.get("backend")
+        domain = domain if domain is not None else req.get("domain")
+        packing = packing if packing is not None else req.get("packing")
+        interpret = (interpret if interpret is not None
+                     else req.get("interpret"))
+    if op == "cim":
+        adc_bits = 5 if adc_bits is None else adc_bits
+        num_trits = 5 if num_trits is None else num_trits
+    _ensure_builtin_backends()
+    return _resolve(op, m, k, n, phase,
+                    "auto" if backend is None else backend,
+                    "float" if domain is None else domain,
+                    "base3" if packing is None else packing,
+                    interpret, bm, bn, bk, adc_bits, num_trits,
+                    _platform())
+
+
+def plan_cache_info():
+    return _resolve.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _resolve.cache_clear()
+
+
+def execute(plan: ExecutionPlan, x, w):
+    """Run a resolved plan: ``x (..., K) @ w -> (..., N)``.
+
+    ``w`` is an ``ops.PackedTernary`` for ternary plans, or a float
+    (K, N) array / base3 PackedTernary for cim plans.  The plan's shape
+    and packing are validated against the operands — a plan resolved for
+    one shape must not silently run another (plans are per-shape)."""
+    spec = get_backend(plan.backend)
+    got = shape_of(x, w)
+    if got != plan.shape:
+        raise ValueError(f"operand shape {got} does not match plan "
+                         f"{plan.shape} (plans are resolved per shape; "
+                         f"call plan_matmul for this shape)")
+    mode = getattr(w, "mode", None)
+    if plan.op == "ternary" and mode is not None and mode != plan.packing:
+        raise ValueError(f"weight packing {mode!r} does not match plan "
+                         f"packing {plan.packing!r}")
+    return spec.runner(plan, x, w)

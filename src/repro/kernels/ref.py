@@ -16,7 +16,8 @@ def ternary_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
     elif mode == "trit2":
         w = unpack_trits2(w_packed).astype(jnp.float32)
     else:
-        raise ValueError(mode)
+        raise ValueError(f"unknown packing mode {mode!r}; expected one of "
+                         f"['base3', 'trit2']")
     y = x.astype(jnp.float32) @ w
     return y * jnp.asarray(scale, jnp.float32)
 
@@ -32,7 +33,8 @@ def ternary_matmul_int8_ref(x_int: jax.Array, x_scale: jax.Array,
     elif mode == "trit2":
         w = unpack_trits2(w_packed, k=x_int.shape[-1]).astype(jnp.int32)
     else:
-        raise ValueError(mode)
+        raise ValueError(f"unknown packing mode {mode!r}; expected one of "
+                         f"['base3', 'trit2']")
     acc = x_int.astype(jnp.int32) @ w
     return (acc.astype(jnp.float32)
             * jnp.asarray(x_scale, jnp.float32)[..., None]

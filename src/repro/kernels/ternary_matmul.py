@@ -118,7 +118,8 @@ def _checked_dims(x: jax.Array, w_packed: jax.Array,
     elif mode == "trit2":
         assert kw * TRIT2_PER_BYTE == kdim, (kw, kdim)
     else:
-        raise ValueError(mode)
+        raise ValueError(f"unknown packing mode {mode!r}; expected one of "
+                         f"['base3', 'trit2']")
     return m, kdim, n
 
 

@@ -107,8 +107,13 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     if cell.kind == "train" and remat != "config":
         cfg = dataclasses.replace(cfg, remat=remat)
     model = registry.build(cfg)
+    # resolved once against the kernel registry: the dry-run pins the
+    # xla backend (Pallas TPU kernels cannot lower on the CPU host
+    # platform) and records the resolved routing in the cell metadata
     cim = CIMConfig(mode="ternary", packing=packed,
-                    backend="xla") if packed else None
+                    backend="xla").resolve() if packed else None
+    if cim is not None:
+        meta["cim_backend"] = cim.backend
 
     t0 = time.monotonic()
     if cell.kind == "train":

@@ -42,6 +42,10 @@ def main(argv=None):
     p.add_argument("--packed", choices=("base3", "trit2"))
     p.add_argument("--domain", default="float", choices=("float", "int8"),
                    help="ternary-mode MXU domain (int8 = decode fast lane)")
+    p.add_argument("--backend", default="auto",
+                   help="kernel execution backend (any registered name; "
+                        "'auto' = capability match, see "
+                        "src/repro/kernels/README.md)")
     p.add_argument("--legacy-loop", action="store_true",
                    help="per-step decode driver (one host sync per token) "
                         "instead of the on-device lax.while_loop")
@@ -76,12 +80,17 @@ def main(argv=None):
 
     cim = None
     if args.packed:
+        # resolve once: 'auto' pins to the registry's capability match
+        # for (domain, packing) on this platform, and a bad request
+        # fails here instead of inside the first decode step
         cim = CIMConfig(mode="ternary", packing=args.packed,
-                        domain=args.domain)
+                        domain=args.domain, backend=args.backend).resolve()
         params = ternarize_params(params, cim)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"weights {raw_bytes/1e6:.1f}MB -> {hbm_bytes(params)/1e6:.1f}MB "
-          f"({args.packed or 'float'})")
+          f"({args.packed or 'float'}"
+          + (f", backend={cim.backend}, domain={cim.domain}" if cim
+             else "") + ")")
 
     extra = {}
     if cfg.family == "audio":

@@ -277,9 +277,14 @@ class _EngineBase:
         self.model = model
         self.params = params
         self.capacity = capacity
-        self.cim = cim
+        # resolve the plan request ONCE at engine construction: 'auto'
+        # backend/interpret pin against the kernel registry here, so an
+        # incapable backend fails loudly now instead of mid-decode, and
+        # every dense() under this engine hits the plan cache with a
+        # fully concrete request
+        self.cim = cim.resolve() if cim is not None else None
         self.extra_inputs = extra_inputs or {}
-        self._prefill = make_prefill_step(model, capacity, cim)
+        self._prefill = make_prefill_step(model, capacity, self.cim)
         self.queue: list[Request] = []
         self.completed: list[Request] = []
         self.steps_run = 0
@@ -333,7 +338,7 @@ class ServeEngine(_EngineBase):
         super().__init__(model, params, capacity, cim, extra_inputs)
         self.max_batch = max_batch
         self.on_device_loop = on_device_loop
-        self._decode = make_decode_step(model, cim)
+        self._decode = make_decode_step(model, self.cim)
         self._loops: dict[int, Callable] = {}   # max_new cap -> jitted loop
 
     def _next_bucket(self) -> list[Request]:
@@ -479,7 +484,7 @@ class Scheduler(_EngineBase):
         self.chunk = chunk
         self._clock = clock
         self._sleep = sleep
-        self._chunk_fn = make_chunked_decode_loop(model, chunk, cim,
+        self._chunk_fn = make_chunked_decode_loop(model, chunk, self.cim,
                                                   spmd_axes)
         self._admit_fn = make_admit_fn()
         # device-side pool: per-slot state + control lanes

@@ -69,6 +69,9 @@ def make_train_step(model, optimizer: Optimizer, cim=None,
     the leading dim must divide by `microbatches`.
     """
     shd.set_activation_context(rules, mesh)
+    # resolve the CIM plan request once at step construction (backend
+    # capability check + interpret probe), not per traced matmul
+    cim = cim.resolve() if cim is not None else None
 
     def loss_fn(params, mb):
         return model.loss(params, mb, cim=cim)

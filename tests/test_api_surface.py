@@ -1,0 +1,115 @@
+"""Public-API snapshot: the exported surface of ``repro.kernels`` and
+``repro.core.cim_linear`` is pinned to tests/api_manifest.json.
+
+Runs in the `quick` CI gate (not marked slow), so any surface drift —
+a renamed export, a changed signature, a new CIMConfig field — shows up
+as an explicit manifest diff instead of an accident discovered by a
+downstream breakage.
+
+Regenerate after an INTENTIONAL surface change:
+
+    PYTHONPATH=src:tests python tests/test_api_surface.py --update
+"""
+import dataclasses
+import inspect
+import json
+import os
+import sys
+
+import pytest
+
+MANIFEST_PATH = os.path.join(os.path.dirname(__file__), "api_manifest.json")
+
+# module -> exported names (repro.kernels pins its whole __all__)
+SURFACE = {
+    "repro.kernels": None,           # None: use __all__
+    "repro.kernels.ops": ["PackedTernary", "pack_weights",
+                          "quantize_acts_int8", "ternary_matmul",
+                          "ternary_matmul_int8", "cim_matmul",
+                          "ternary_matmul_xla", "ternary_matmul_int8_xla"],
+    "repro.core.cim_linear": ["CIMConfig", "linear", "ternarize_params",
+                              "hbm_bytes", "MODES"],
+}
+
+
+def _describe(obj) -> dict:
+    """JSON-stable description of one exported symbol."""
+    if dataclasses.is_dataclass(obj) and isinstance(obj, type):
+        entry = {"kind": "dataclass",
+                 "fields": {f.name: repr(f.default)
+                            if f.default is not dataclasses.MISSING
+                            else "<required>"
+                            for f in dataclasses.fields(obj)}}
+        methods = {n: str(inspect.signature(m))
+                   for n, m in vars(obj).items()
+                   if not n.startswith("_") and callable(m)}
+        if methods:
+            entry["methods"] = methods
+        return entry
+    if inspect.isclass(obj):
+        return {"kind": "class",
+                "methods": {n: str(inspect.signature(m))
+                            for n, m in vars(obj).items()
+                            if not n.startswith("_")
+                            and inspect.isfunction(m)}}
+    if callable(obj):
+        return {"kind": "function", "signature": str(inspect.signature(obj))}
+    if inspect.ismodule(obj):
+        return {"kind": "module"}
+    return {"kind": type(obj).__name__, "value": repr(obj)}
+
+
+def snapshot() -> dict:
+    import importlib
+    out = {}
+    for modname, names in SURFACE.items():
+        mod = importlib.import_module(modname)
+        if names is None:
+            names = list(getattr(mod, "__all__"))
+        out[modname] = {name: _describe(getattr(mod, name))
+                        for name in sorted(names)}
+    return out
+
+
+def test_public_api_matches_manifest():
+    assert os.path.exists(MANIFEST_PATH), (
+        f"missing {MANIFEST_PATH}; generate it with "
+        f"`PYTHONPATH=src:tests python tests/test_api_surface.py --update`")
+    with open(MANIFEST_PATH) as f:
+        pinned = json.load(f)
+    current = snapshot()
+    diffs = []
+    for mod in sorted(set(pinned) | set(current)):
+        p, c = pinned.get(mod, {}), current.get(mod, {})
+        for name in sorted(set(p) | set(c)):
+            if name not in c:
+                diffs.append(f"{mod}.{name}: removed from surface")
+            elif name not in p:
+                diffs.append(f"{mod}.{name}: new export (not in manifest)")
+            elif p[name] != c[name]:
+                diffs.append(f"{mod}.{name}: {p[name]} -> {c[name]}")
+    assert not diffs, (
+        "public API drift vs tests/api_manifest.json — if intentional, "
+        "regenerate with `PYTHONPATH=src:tests python "
+        "tests/test_api_surface.py --update`:\n  " + "\n  ".join(diffs))
+
+
+def test_manifest_covers_plan_entrypoints():
+    # the redesign's load-bearing exports must stay pinned
+    with open(MANIFEST_PATH) as f:
+        pinned = json.load(f)
+    kernels = pinned["repro.kernels"]
+    for name in ("ExecutionPlan", "plan_matmul", "execute",
+                 "register_backend", "BackendSpec"):
+        assert name in kernels, name
+
+
+if __name__ == "__main__":
+    if "--update" in sys.argv:
+        with open(MANIFEST_PATH, "w") as f:
+            json.dump(snapshot(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {MANIFEST_PATH}")
+    else:
+        print(__doc__)
+        sys.exit(pytest.main([__file__, "-q"]))

@@ -8,15 +8,22 @@ Contracts pinned here (ISSUE 2 acceptance):
     for batch <= 16 decode shapes;
   * the on-device decode loop emits tokens identical to the legacy
     per-step driver and performs exactly ONE host transfer per bucket.
+
+Plus the ExecutionPlan migration contract (ISSUE 4 acceptance): every
+(backend, domain, packing) dispatch cell is bitwise identical between
+the deprecated kwarg routing and plan_matmul/execute, and plan
+resolution under jit is cache-hit free of re-probing.
 """
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import (execute, ops, plan_cache_clear, plan_cache_info,
+                           plan_matmul, ref, shape_of)
 from repro.kernels.ternary_matmul import (DEFAULT_BLOCKS, SUBLANE,
                                           select_block_shapes,
                                           ternary_matmul_int8)
@@ -72,8 +79,11 @@ class TestDecodeShapeEquivalence:
         x = jax.random.normal(key, (m, 384), jnp.float32)
         w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (384, 256))
         pw = ops.pack_weights(w, mode)
-        y_pallas = ops.ternary_matmul(x, pw, interpret=True)  # auto blocks
-        y_xla = ops.ternary_matmul(x, pw, backend="xla")
+        mkn = shape_of(x, pw)
+        y_pallas = execute(plan_matmul(mkn, packing=mode, backend="pallas",
+                                       interpret=True), x, pw)  # auto blocks
+        y_xla = execute(plan_matmul(mkn, packing=mode, backend="xla"),
+                        x, pw)
         y_oracle = ref.ternary_matmul_ref(x, pw.data, pw.scale, mode)
         np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_oracle),
                                    rtol=1e-5, atol=1e-4)
@@ -88,8 +98,12 @@ class TestDecodeShapeEquivalence:
         x = jax.random.normal(key, (m, 384), jnp.float32)
         w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (384, 256))
         pw = ops.pack_weights(w, mode)
-        y_pallas = ops.ternary_matmul_int8(x, pw, interpret=True)
-        y_xla = ops.ternary_matmul_int8(x, pw, backend="xla")
+        mkn = shape_of(x, pw)
+        y_pallas = execute(plan_matmul(mkn, packing=mode, domain="int8",
+                                       backend="pallas", interpret=True),
+                           x, pw)
+        y_xla = execute(plan_matmul(mkn, packing=mode, domain="int8",
+                                    backend="xla"), x, pw)
         xi, xs = ops.quantize_acts_int8(x)
         y_oracle = ref.ternary_matmul_int8_ref(xi, xs, pw.data, pw.scale,
                                                mode)
@@ -104,22 +118,27 @@ class TestDecodeShapeEquivalence:
         x = jax.random.normal(key, (8, 256), jnp.float32)
         w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (256, 128))
         pw = ops.pack_weights(w, mode)
-        y_int = ops.ternary_matmul(x, pw, domain="int8", backend="xla")
-        y_f = ops.ternary_matmul(x, pw, backend="xla")
+        mkn = shape_of(x, pw)
+        y_int = execute(plan_matmul(mkn, packing=mode, domain="int8",
+                                    backend="xla"), x, pw)
+        y_f = execute(plan_matmul(mkn, packing=mode, backend="xla"), x, pw)
         rel = float(jnp.linalg.norm(y_int - y_f) /
                     (jnp.linalg.norm(y_f) + 1e-9))
         assert rel < 0.02, rel            # 7-bit activations: ~1% error
         with pytest.raises(ValueError, match="domain"):
-            ops.ternary_matmul(x, pw, domain="INT8")
+            plan_matmul(mkn, packing=mode, domain="INT8")
 
     def test_int8_kernel_explicit_blocks_match_auto(self):
         key = jax.random.PRNGKey(9)
         x = jax.random.normal(key, (5, 200), jnp.float32)
         w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (200, 96))
         pw = ops.pack_weights(w, "trit2")
-        auto = ops.ternary_matmul_int8(x, pw, interpret=True)
-        pinned = ops.ternary_matmul_int8(x, pw, interpret=True,
-                                         bm=8, bn=32, bk=64)
+        mkn = shape_of(x, pw)
+        auto = execute(plan_matmul(mkn, packing="trit2", domain="int8",
+                                   backend="pallas", interpret=True), x, pw)
+        pinned = execute(plan_matmul(mkn, packing="trit2", domain="int8",
+                                     backend="pallas", interpret=True,
+                                     bm=8, bn=32, bk=64), x, pw)
         np.testing.assert_array_equal(np.asarray(auto), np.asarray(pinned))
 
 
@@ -141,6 +160,70 @@ class TestXlaStackedWeights:
             np.testing.assert_allclose(np.asarray(y[layer]),
                                        np.asarray(ops.ternary_matmul_xla(
                                            x, pl_)), rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------- plan API: old-vs-new dispatch
+
+class TestPlanDispatchParity:
+    """Bitwise parity of the deprecated kwarg routing vs plan/execute
+    across EVERY (backend, domain, packing) dispatch cell."""
+
+    @pytest.mark.parametrize("backend", ["pallas", "xla"])
+    @pytest.mark.parametrize("domain", ["float", "int8"])
+    @pytest.mark.parametrize("mode", ["base3", "trit2"])
+    def test_cell_bitwise_identical(self, backend, domain, mode):
+        key = jax.random.PRNGKey(42)
+        x = jax.random.normal(key, (7, 384), jnp.float32)
+        w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (384, 256))
+        pw = ops.pack_weights(w, mode)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            y_old = ops.ternary_matmul(x, pw, backend=backend,
+                                       domain=domain)
+        plan = plan_matmul(shape_of(x, pw), backend=backend, domain=domain,
+                           packing=mode)
+        np.testing.assert_array_equal(np.asarray(y_old),
+                                      np.asarray(execute(plan, x, pw)))
+
+    def test_pinned_blocks_parity(self):
+        x, w = (jax.random.normal(jax.random.PRNGKey(1), (5, 200)),
+                0.02 * jax.random.normal(jax.random.PRNGKey(2), (200, 96)))
+        pw = ops.pack_weights(w, "trit2")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            y_old = ops.ternary_matmul_int8(x, pw, interpret=True,
+                                            bm=8, bn=32, bk=64)
+        plan = plan_matmul(shape_of(x, pw), packing="trit2", domain="int8",
+                           backend="pallas", interpret=True,
+                           bm=8, bn=32, bk=64)
+        assert plan.blocks == (8, 32, 64)
+        np.testing.assert_array_equal(np.asarray(y_old),
+                                      np.asarray(execute(plan, x, pw)))
+
+    def test_plan_blocks_equal_adaptive_selection(self):
+        # plan resolution hoists the same shape-adaptive choice the
+        # kernel used to make per call (int8 lane uses its own sublane)
+        p_f = plan_matmul((8, 1024, 1024), backend="pallas")
+        p_i = plan_matmul((8, 1024, 1024), backend="pallas", domain="int8")
+        assert p_f.blocks == select_block_shapes(8, 1024, 1024, "base3")
+        assert p_i.blocks == select_block_shapes(8, 1024, 1024, "base3",
+                                                 domain="int8")
+
+    def test_plan_cache_hits_under_jit(self):
+        from repro.core.cim_linear import CIMConfig, linear
+        cfg = CIMConfig(mode="ternary", packing="base3").resolve()
+        w = 0.02 * jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+        pw = ops.pack_weights(w, "base3")
+        step = jax.jit(lambda x: linear(x, pw, cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 128))
+        plan_cache_clear()
+        step(x)                               # trace: one resolution
+        misses = plan_cache_info().misses
+        assert misses == 1
+        step(x + 1.0)                         # warm executable: no resolve
+        assert plan_cache_info().misses == misses
+        step(jax.random.normal(jax.random.PRNGKey(2), (6, 128)))
+        assert plan_cache_info().misses == misses + 1   # new shape only
 
 
 # ------------------------------------------------------- bench metrics

@@ -1,5 +1,9 @@
 """Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles,
-with shape/dtype sweeps and hypothesis property tests."""
+with shape/dtype sweeps and hypothesis property tests, plus the
+plan/registry API contract (ExecutionPlan resolution, capability
+matching, deprecation shims)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +17,10 @@ except ImportError:                       # offline image: shim
 
 from repro.core.packing import pack_base3, pack_trits2
 from repro.core.ternary import to_balanced_ternary
-from repro.kernels import ops, ref
+from repro.kernels import (BackendSpec, ExecutionPlan, backend_names,
+                           execute, ops, plan_cache_clear, plan_cache_info,
+                           plan_matmul, ref, register_backend, shape_of,
+                           unregister_backend)
 from repro.kernels.cim_mac import cim_mac
 from repro.kernels.ternary_matmul import ternary_matmul
 
@@ -104,6 +111,130 @@ class TestCimMacKernel:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def _operands(m=5, k=384, n=256, mode="base3"):
+    key = jax.random.PRNGKey(m + k + n)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    return x, ops.pack_weights(w, mode)
+
+
+class TestExecutionPlanAPI:
+    def test_plan_is_frozen_hashable_and_cached(self):
+        plan_cache_clear()
+        p1 = plan_matmul((5, 384, 256), backend="pallas")
+        p2 = plan_matmul((5, 384, 256), backend="pallas")
+        assert p1 is p2                     # lru-cached resolution
+        assert plan_cache_info().hits >= 1
+        assert hash(p1) == hash(p2) and {p1: "ok"}[p2] == "ok"
+        with pytest.raises(Exception):      # frozen dataclass
+            p1.backend = "xla"
+
+    def test_plan_resolves_auto_fields_once(self):
+        p = plan_matmul((5, 384, 256))
+        assert p.backend in backend_names() and p.backend != "auto"
+        assert isinstance(p.interpret, bool)       # probe hoisted
+        assert p.blocks is not None if p.backend == "pallas" else True
+
+    def test_unknown_names_list_choices(self):
+        with pytest.raises(ValueError, match=r"registered: \['pallas'"):
+            plan_matmul((4, 64, 32), backend="cuda")
+        with pytest.raises(ValueError, match=r"'float', 'int8'"):
+            plan_matmul((4, 64, 32), domain="fp8")
+        with pytest.raises(ValueError, match=r"'base3', 'trit2'"):
+            plan_matmul((4, 64, 32), packing="dense")
+        with pytest.raises(ValueError, match=r"'auto', 'decode', 'prefill'"):
+            plan_matmul((4, 64, 32), phase="warmup")
+        with pytest.raises(ValueError, match=r"'cim', 'ternary'"):
+            plan_matmul((4, 64, 32), op="conv")
+
+    def test_capability_mismatch_fails_loudly(self):
+        # an int8 plan on a float-only backend must not fall through
+        register_backend(BackendSpec(
+            name="float_only", ops=frozenset({"ternary"}),
+            domains=frozenset({"float"}),
+            packings=frozenset({"base3", "trit2"}),
+            platforms=frozenset({"cpu", "tpu"}), priority=1,
+            runner=lambda plan, x, w: x))
+        try:
+            with pytest.raises(ValueError,
+                               match=r"does not support domain 'int8'"):
+                plan_matmul((4, 64, 32), backend="float_only",
+                            domain="int8")
+            # ... and auto-selection never picks it for int8
+            p = plan_matmul((4, 64, 32), domain="int8")
+            assert p.backend != "float_only"
+        finally:
+            unregister_backend("float_only")
+        assert "float_only" not in backend_names()
+        # xla cannot run the macro-exact cim op
+        with pytest.raises(ValueError, match=r"does not support op 'cim'"):
+            plan_matmul((4, 64, 32), op="cim", backend="xla")
+
+    def test_execute_rejects_mismatched_operands(self):
+        x, pw = _operands()
+        plan = plan_matmul(shape_of(x, pw), backend="xla")
+        with pytest.raises(ValueError, match="does not match plan"):
+            execute(plan, x[:2], pw)        # plans are per-shape
+        pw2 = ops.pack_weights(0.02 * jnp.ones((384, 256)), "trit2")
+        with pytest.raises(ValueError, match="packing"):
+            execute(plan, x, pw2)
+
+    def test_ref_backend_matches_oracle(self):
+        for mode in ("base3", "trit2"):
+            x, pw = _operands(mode=mode)
+            y = execute(plan_matmul(shape_of(x, pw), packing=mode,
+                                    backend="ref"), x, pw)
+            want = ref.ternary_matmul_ref(x, pw.data, pw.scale, mode)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+
+    def test_plan_request_from_cfg_object(self):
+        from repro.core.cim_linear import CIMConfig
+        cfg = CIMConfig(mode="ternary", packing="trit2", domain="int8",
+                        backend="xla")
+        p = plan_matmul((8, 128, 64), cfg=cfg)
+        assert (p.backend, p.domain, p.packing) == ("xla", "int8", "trit2")
+        assert cfg.plan_request()["domain"] == "int8"
+        r = cfg.resolve()
+        assert r.backend == "xla" and isinstance(r.interpret, bool)
+
+
+class TestDeprecationShims:
+    @pytest.mark.parametrize("mode", ["base3", "trit2"])
+    def test_ternary_matmul_kwargs_warn_and_match_plan(self, mode):
+        x, pw = _operands(mode=mode)
+        with pytest.warns(DeprecationWarning, match="plan_matmul"):
+            y_old = ops.ternary_matmul(x, pw, backend="xla")
+        y_new = execute(plan_matmul(shape_of(x, pw), packing=mode,
+                                    backend="xla"), x, pw)
+        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+
+    def test_int8_shim_warns_and_matches_plan(self):
+        x, pw = _operands(mode="trit2")
+        with pytest.warns(DeprecationWarning, match="plan_matmul"):
+            y_old = ops.ternary_matmul_int8(x, pw, interpret=True)
+        y_new = execute(plan_matmul(shape_of(x, pw), packing="trit2",
+                                    domain="int8", backend="pallas",
+                                    interpret=True), x, pw)
+        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+
+    def test_cim_shim_warns_and_matches_plan(self):
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (6, 64))
+        w = 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (64, 24))
+        with pytest.warns(DeprecationWarning, match="plan_matmul"):
+            y_old = ops.cim_matmul(x, w, interpret=True, bm=8, bn=8, bk=16)
+        plan = plan_matmul(shape_of(x, w), op="cim", interpret=True,
+                           bm=8, bn=8, bk=16)
+        np.testing.assert_array_equal(np.asarray(y_old),
+                                      np.asarray(execute(plan, x, w)))
+
+    def test_plain_calls_do_not_warn(self):
+        x, pw = _operands()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            ops.ternary_matmul(x, pw)       # no routing kwargs: silent
+
+
 class TestOpsWrappers:
     def test_pack_weights_base3_matmul(self):
         key = jax.random.PRNGKey(0)
@@ -111,7 +242,9 @@ class TestOpsWrappers:
         x = jax.random.normal(jax.random.fold_in(key, 1), (4, 10, 96))
         pw = ops.pack_weights(w, "base3")
         assert pw.data.dtype == jnp.uint8 and pw.data.shape == (96, 48)
-        y = ops.ternary_matmul(x, pw, interpret=True, bm=16, bn=16, bk=32)
+        y = execute(plan_matmul(shape_of(x, pw), backend="pallas",
+                                interpret=True, bm=16, bn=16, bk=32),
+                    x, pw)
         rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
         assert rel < 0.02, rel
 
@@ -120,7 +253,9 @@ class TestOpsWrappers:
         pw = ops.pack_weights(w, "trit2")
         assert pw.data.shape == (32, 64)        # 4 trits/byte: 8x vs bf16
         x = jax.random.normal(jax.random.PRNGKey(2), (8, 128))
-        y = ops.ternary_matmul(x, pw, interpret=True, bm=8, bn=16, bk=32)
+        y = execute(plan_matmul(shape_of(x, pw), packing="trit2",
+                                backend="pallas", interpret=True,
+                                bm=8, bn=16, bk=32), x, pw)
         # single-trit quantization is lossy; just require usable correlation
         ref_y = x @ w
         cos = float(jnp.sum(y * ref_y) /
@@ -132,7 +267,8 @@ class TestOpsWrappers:
         key = jax.random.PRNGKey(3)
         x = jax.random.normal(key, (6, 64))
         w = 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (64, 24))
-        got = ops.cim_matmul(x, w, interpret=True, bm=8, bn=8, bk=16)
+        got = execute(plan_matmul(shape_of(x, w), op="cim", interpret=True,
+                                  bm=8, bn=8, bk=16), x, w)
         # core path quantizes per-tensor; ops path per-tensor too for plain w
         want = cim_core.cim_matmul(x, w)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),

@@ -114,11 +114,13 @@ def test_int8_compression_idempotent_on_compressed(seed):
 
 @given(st.sampled_from(["base3", "trit2"]), st.integers(0, 3))
 def test_packed_matmul_backends_agree(mode, seed):
-    from repro.kernels import ops
+    from repro.kernels import execute, ops, plan_matmul, shape_of
     key = jax.random.key(seed)
     w = jax.random.normal(key, (64, 32))
     x = jax.random.normal(jax.random.fold_in(key, 1), (4, 64))
     pw = ops.pack_weights(w, mode)
-    y_pallas = ops.ternary_matmul(x, pw, interpret=True)
-    y_xla = ops.ternary_matmul(x, pw, backend="xla")
+    mkn = shape_of(x, pw)
+    y_pallas = execute(plan_matmul(mkn, packing=mode, backend="pallas",
+                                   interpret=True), x, pw)
+    y_xla = execute(plan_matmul(mkn, packing=mode, backend="xla"), x, pw)
     assert jnp.allclose(y_pallas, y_xla, atol=1e-4, rtol=1e-4)

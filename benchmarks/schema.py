@@ -14,6 +14,7 @@ import os
 TOP_LEVEL = {
     "wallclock": {
         "backend", "platform", "shapes", "serve", "serve_continuous",
+        "serve_paged",
         "min_decode_flop_waste_reduction",
         "claim_waste_reduction_ge_8x",
         "claim_device_loop_single_transfer",
@@ -22,6 +23,9 @@ TOP_LEVEL = {
         "claim_continuous_beats_bucket_p99",
         "claim_continuous_tokens_identical",
         "claim_chunk_transfer_accounting",
+        "claim_paged_tokens_identical",
+        "claim_paged_kv_bytes_2x",
+        "claim_paged_prefix_hits",
     },
     "kernel_bench": {
         "sweep", "max_rel_err", "all_match_oracle",
@@ -55,6 +59,19 @@ SERVE_CONTINUOUS_DRIVER = {"tok_per_s", "wall_s", "tokens", "p50_s",
                            "p99_s"}
 SERVE_CONTINUOUS_ONLY = {"slot_occupancy", "host_transfers", "chunks",
                          "decode_steps"}
+
+# wallclock serve_paged section: the paged-vs-dense slot-pool artifact
+# contract (resident KV bytes, page accounting, prefix sharing, tok/s
+# at equal pool width/memory budget)
+SERVE_PAGED = {
+    "slots", "chunk", "capacity", "page_size", "num_pages", "trace",
+    "tok_per_s_dense", "tok_per_s_paged",
+    "kv_bytes_dense", "kv_bytes_paged_pool", "kv_bytes_paged_peak",
+    "kv_bytes_reduction", "pages_in_use_peak", "prefix_hit_rate",
+    "claim_paged_tokens_identical",
+    "claim_paged_kv_bytes_2x",
+    "claim_paged_prefix_hits",
+}
 
 
 def validate(name: str, payload: dict) -> list[str]:
@@ -110,6 +127,14 @@ def validate(name: str, payload: dict) -> list[str]:
                                   f"missing {sorted(miss)}")
         elif "serve_continuous" in payload:
             errors.append("wallclock serve_continuous: not an object")
+        sp = payload.get("serve_paged")
+        if isinstance(sp, dict):
+            miss = SERVE_PAGED - sp.keys()
+            if miss:
+                errors.append(f"wallclock serve_paged: missing "
+                              f"{sorted(miss)}")
+        elif "serve_paged" in payload:
+            errors.append("wallclock serve_paged: not an object")
     return errors
 
 

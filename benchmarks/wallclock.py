@@ -334,6 +334,123 @@ def serve_continuous_bench(fast: bool = False,
     }
 
 
+def serve_paged_bench(fast: bool = False,
+                      arch: str = "internlm2-1.8b") -> dict:
+    """Paged, prefix-shared KV pool vs the dense slot pool at equal pool
+    width AND equal memory budget (the paged pool's ``num_pages``
+    defaults to the dense-pool equivalent, so both schedulers may touch
+    the same worst-case bytes — the paged one just doesn't resident
+    them).
+
+    The trace is the paper's density argument shaped as serving
+    traffic: mostly short requests with a shared per-length prompt (a
+    system-prompt stand-in — identical prefixes that the dense pool
+    duplicates per slot) plus one long request per burst that forces
+    the dense capacity to be provisioned at 64 positions for EVERY
+    slot.  Gates: per-request tokens bitwise identical across pools,
+    peak resident KV bytes >= 2x lower paged, and a nonzero
+    prefix-hit rate.
+    """
+    import dataclasses
+    import time as _time
+
+    from repro import configs
+    from repro.models import registry
+    from repro.serve import (PagedScheduler, Request, Scheduler,
+                             bursty_arrivals, make_trace)
+
+    cfg = dataclasses.replace(configs.smoke(arch), dtype=jnp.float32,
+                              d_model=256, d_ff=768, num_layers=4)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+
+    slots, chunk, capacity, page_size = 4, 8, 64, 8
+    n = 16
+    arrivals = bursty_arrivals(n, bursts=2, gap_s=0.1, spread_s=0.0,
+                               seed=11)
+    # cycle of 8 divides the burst size: every burst carries the same
+    # mix — 6 short (8-token) requests, one 16, one 48-token straggler
+    # whose budget (48 + 16 = 64) sets the dense per-slot capacity
+    trace = make_trace(arrivals,
+                       prompt_lens=[8, 8, 16, 8, 8, 16, 8, 48],
+                       max_news=[8, 8, 8, 8, 8, 8, 8, 16])
+
+    def requests(records) -> list:
+        out = []
+        for i, rec in enumerate(records):
+            # one prompt per length class: identical prefixes across
+            # same-length requests (the prefix-sharing workload)
+            prompt = jax.random.randint(
+                jax.random.fold_in(key, rec["prompt_len"]),
+                (rec["prompt_len"],), 0, cfg.vocab_size)
+            out.append(Request(uid=i, prompt=prompt,
+                               max_new=rec["max_new"],
+                               eos_id=rec["eos_id"],
+                               arrival_s=rec["arrival_s"]))
+        return out
+
+    warm = [dict(rec, arrival_s=0.0) for rec in trace]
+    repeats = 3 if fast else 5
+
+    dense = Scheduler(model, params, capacity=capacity, slots=slots,
+                      chunk=chunk)
+    paged = PagedScheduler(model, params, capacity=capacity, slots=slots,
+                           chunk=chunk, page_size=page_size)
+
+    def replay(eng):
+        done0, tok0 = len(eng.completed), eng.generated_tokens
+        for r in requests(trace):
+            eng.submit(r)
+        t0 = _time.perf_counter()
+        eng.run()
+        wall = _time.perf_counter() - t0
+        done = eng.completed[done0:]
+        tokens = eng.generated_tokens - tok0
+        return (round(tokens / max(wall, 1e-9), 1), round(wall, 3),
+                tokens, {r.uid: list(r.out_tokens) for r in done})
+
+    for eng in (dense, paged):           # warmup: compile every key
+        for r in requests(warm):
+            eng.submit(r)
+        eng.run()
+    # measure only the bursty replays: the all-at-t=0 warmup can
+    # co-resident a different request mix than any replay reaches
+    paged.allocator.reset_stats()
+
+    dense_replays, paged_replays = [], []
+    for _ in range(repeats):             # interleaved best-of (fixed N)
+        dense_replays.append(replay(dense))
+        paged_replays.append(replay(paged))
+    dense_tokps = max(r[0] for r in dense_replays)
+    paged_tokps = max(r[0] for r in paged_replays)
+    dense_out = dense_replays[-1][3]
+    paged_out = paged_replays[-1][3]
+
+    kv_dense = dense.kv_bytes()
+    kv_paged_peak = paged.kv_bytes_resident_peak
+    out = {
+        "arch": arch, "model": "smoke-wide-256", "requests": n,
+        "slots": slots, "chunk": chunk, "capacity": capacity,
+        "page_size": page_size, "num_pages": paged.num_pages,
+        "trace": trace,
+        "tok_per_s_dense": dense_tokps,
+        "tok_per_s_paged": paged_tokps,
+        "kv_bytes_dense": kv_dense,
+        "kv_bytes_paged_pool": paged.kv_bytes(),
+        "kv_bytes_paged_peak": kv_paged_peak,
+        "kv_bytes_reduction": round(kv_dense / max(kv_paged_peak, 1), 2),
+        "pages_in_use_peak": paged.allocator.peak_in_use,
+        "prefix_hit_rate": round(paged.prefix_hit_rate, 4),
+        "prefix_hits": paged.allocator.prefix_hits,
+        # per-request token VALUES across pools (bitwise parity)
+        "claim_paged_tokens_identical": paged_out == dense_out,
+        "claim_paged_kv_bytes_2x": kv_dense >= 2 * kv_paged_peak,
+        "claim_paged_prefix_hits": paged.allocator.prefix_hits > 0,
+    }
+    return out
+
+
 def run(verbose: bool = True, fast: bool = False,
         write_root: bool | None = None) -> dict:
     """write_root=True rewrites the tracked repo-root baseline
@@ -349,6 +466,7 @@ def run(verbose: bool = True, fast: bool = False,
     # asymmetrically on contended small hosts if it runs in that wake
     serve = serve_loop_bench(max_new=4 if fast else 8)
     serve_continuous = serve_continuous_bench(fast=fast)
+    serve_paged = serve_paged_bench(fast=fast)
     decode = DECODE_SHAPES[:2] if fast else DECODE_SHAPES
     prefill = PREFILL_SHAPES[:1] if fast else PREFILL_SHAPES
     shapes = []
@@ -370,6 +488,7 @@ def run(verbose: bool = True, fast: bool = False,
         "shapes": shapes,
         "serve": serve,
         "serve_continuous": serve_continuous,
+        "serve_paged": serve_paged,
         "min_decode_flop_waste_reduction": min_reduction,
         "claim_waste_reduction_ge_8x": bool(min_reduction >= 8.0),
         "claim_device_loop_single_transfer":
@@ -383,6 +502,12 @@ def run(verbose: bool = True, fast: bool = False,
             serve_continuous["claim_continuous_tokens_identical"],
         "claim_chunk_transfer_accounting":
             serve_continuous["claim_chunk_transfer_accounting"],
+        "claim_paged_tokens_identical":
+            serve_paged["claim_paged_tokens_identical"],
+        "claim_paged_kv_bytes_2x":
+            serve_paged["claim_paged_kv_bytes_2x"],
+        "claim_paged_prefix_hits":
+            serve_paged["claim_paged_prefix_hits"],
     }
     if verbose:
         print(f"  {len(shapes)} shape cells ({backend} backend); decode "
@@ -405,6 +530,14 @@ def run(verbose: bool = True, fast: bool = False,
               f"{serve_continuous['claim_continuous_tokens_identical']}, "
               f"transfers==chunks: "
               f"{serve_continuous['claim_chunk_transfer_accounting']})")
+        sp = serve_paged
+        print(f"  paged KV: {sp['kv_bytes_dense']/1e3:.0f}kB dense -> "
+              f"{sp['kv_bytes_paged_peak']/1e3:.0f}kB peak resident "
+              f"({sp['kv_bytes_reduction']}x, >= 2x: "
+              f"{sp['claim_paged_kv_bytes_2x']}), prefix hit rate "
+              f"{sp['prefix_hit_rate']}, {sp['tok_per_s_paged']} tok/s "
+              f"vs dense {sp['tok_per_s_dense']} (tokens identical: "
+              f"{sp['claim_paged_tokens_identical']})")
     if write_root:
         save_bench_json("wallclock", out)
     else:

@@ -44,11 +44,13 @@ class CIMConfig:
     interpret: Optional[bool] = None
     backend: str = "auto"          # any registered kernel backend
     domain: str = "float"          # float | int8 — ternary-mode MXU domain
+    kv_layout: str = "dense"       # dense | paged — serving KV layout
 
     def plan_request(self) -> dict:
         """The fields this config contributes to plan resolution."""
         return {"backend": self.backend, "domain": self.domain,
-                "packing": self.packing, "interpret": self.interpret}
+                "packing": self.packing, "interpret": self.interpret,
+                "kv_layout": self.kv_layout}
 
     def resolve(self) -> "CIMConfig":
         """Pin 'auto' routing fields against the kernel backend registry
@@ -60,9 +62,15 @@ class CIMConfig:
         backend = self.backend
         if self.mode == "ternary":
             backend = resolve_backend("ternary", self.backend, self.domain,
-                                      self.packing).name
+                                      self.packing,
+                                      kv_layout=self.kv_layout).name
         elif self.mode == "exact":
-            backend = resolve_backend("cim", self.backend).name
+            backend = resolve_backend("cim", self.backend,
+                                      kv_layout=self.kv_layout).name
+        else:
+            from repro.kernels import check_choice
+            from repro.kernels.plan import KV_LAYOUTS
+            check_choice("kv layout", self.kv_layout, KV_LAYOUTS)
         interpret = (default_interpret() if self.interpret is None
                      else self.interpret)
         return dataclasses.replace(self, backend=backend,

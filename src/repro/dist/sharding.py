@@ -59,6 +59,11 @@ _TRAIN_AXES = {
     # serving batch axis, so it folds over the same DP axes (the per-slot
     # inner batch of 1 then replicates by divisibility)
     "slot": mesh_lib.DP_AXES,
+    # paged-KV block pool: pages distribute over the same DP axes the
+    # slots fold over (each data shard owns a stripe of the page pool;
+    # per-slot gathers cross shards only for pages another shard wrote —
+    # the prefix-shared ones).  Same folding/divisibility policy.
+    "page": mesh_lib.DP_AXES,
     "seq": None,
     "kv_seq": None,
     "head_count": "model",
@@ -183,6 +188,18 @@ def logical_to_spec(axes: tuple, shape: tuple, rules: Rules,
     while entries and entries[-1] is None:
         entries.pop()
     return P(*entries)
+
+
+def page_spmd_axes(rules: Rules, mesh, pages: int):
+    """Physical mesh axes the paged-KV pool's leading ``page`` axis
+    folds over — the page-pool mirror of :func:`slot_spmd_axes`, with
+    the same folding/divisibility policy (an indivisible pool
+    replicates; returns None when 'page' resolves to replicated)."""
+    entry = _resolve_dim(rules.physical("page"), pages, "page",
+                         mesh_lib.axis_sizes(mesh), set(), rules.quantum)
+    if entry is None:
+        return None
+    return entry if isinstance(entry, str) else tuple(entry)
 
 
 def slot_spmd_axes(rules: Rules, mesh, slots: int):

@@ -105,6 +105,14 @@ def _run_ref(plan, x, w):
     return ref.ternary_matmul_ref(x, w.data, w.scale, w.mode)
 
 
+# All built-ins are plan-aware for both KV layouts: the matmul kernels
+# themselves are layout-agnostic (the paged pool's gather/scatter wraps
+# AROUND the dense()/attention matmuls — models/paged_kv.py), so they
+# declare {dense, paged} and a paged serving loop can be planned on any
+# of them.  A future layout-specialized executor (e.g. a fused paged-
+# attention kernel) would declare only the layouts it implements.
+_ALL_KV_LAYOUTS = frozenset({"dense", "paged"})
+
 register_backend(BackendSpec(
     name="pallas",
     ops=frozenset({"ternary", "cim"}),
@@ -114,6 +122,7 @@ register_backend(BackendSpec(
     priority=100,
     runner=_run_pallas,
     needs_blocks=True,
+    kv_layouts=_ALL_KV_LAYOUTS,
 ))
 
 register_backend(BackendSpec(
@@ -124,6 +133,7 @@ register_backend(BackendSpec(
     platforms=frozenset({"cpu", "gpu", "tpu"}),
     priority=50,
     runner=_run_xla,
+    kv_layouts=_ALL_KV_LAYOUTS,
 ))
 
 register_backend(BackendSpec(
@@ -134,4 +144,5 @@ register_backend(BackendSpec(
     platforms=frozenset({"cpu", "gpu", "tpu"}),
     priority=10,
     runner=_run_ref,
+    kv_layouts=_ALL_KV_LAYOUTS,
 ))

@@ -179,7 +179,14 @@ def ternary_matmul_int8_xla(x_int: jax.Array, x_scale: jax.Array,
 
 # ------------------------------------------------------ deprecation shims
 
-def _warn_legacy(fn: str, used: dict) -> None:
+def _warn_legacy(fn: str, used: dict, stacklevel: int = 1) -> None:
+    """Emit the routing-kwarg DeprecationWarning at the SHIM CALLER's
+    frame.  ``stacklevel`` counts frames between the shim and the user
+    (1 = the shim was called directly); each shim passes its depth
+    explicitly so a future shim sitting one level deeper cannot
+    silently misattribute the warning.  The reported filename must be
+    the user's call site — pinned by
+    tests/test_kernels.py::test_shim_warning_points_at_caller."""
     used = {k: v for k, v in used.items() if v is not None}
     if used:
         warnings.warn(
@@ -187,7 +194,7 @@ def _warn_legacy(fn: str, used: dict) -> None:
             f"deprecated: resolve an ExecutionPlan once with "
             f"repro.kernels.plan_matmul and run repro.kernels.execute "
             f"(src/repro/kernels/README.md has the migration table)",
-            DeprecationWarning, stacklevel=3)
+            DeprecationWarning, stacklevel=2 + stacklevel)
 
 
 def ternary_matmul(x: jax.Array, w: PackedTernary, *, interpret=None,
@@ -202,7 +209,7 @@ def ternary_matmul(x: jax.Array, w: PackedTernary, *, interpret=None,
     _warn_legacy("ternary_matmul", {
         "interpret": interpret, "bm": bm, "bn": bn, "bk": bk,
         "backend": None if backend == "auto" else backend,
-        "domain": None if domain == "float" else domain})
+        "domain": None if domain == "float" else domain}, stacklevel=1)
     plan = plan_matmul(shape_of(x, w), backend=backend, domain=domain,
                        packing=w.mode, interpret=interpret,
                        bm=bm, bn=bn, bk=bk)
@@ -221,7 +228,7 @@ def ternary_matmul_int8(x: jax.Array, w: PackedTernary, *, interpret=None,
     """
     _warn_legacy("ternary_matmul_int8", {
         "interpret": interpret, "bm": bm, "bn": bn, "bk": bk,
-        "backend": None if backend == "auto" else backend})
+        "backend": None if backend == "auto" else backend}, stacklevel=1)
     plan = plan_matmul(shape_of(x, w), backend=backend, domain="int8",
                        packing=w.mode, interpret=interpret,
                        bm=bm, bn=bn, bk=bk)
@@ -238,7 +245,7 @@ def cim_matmul(x: jax.Array, w: "PackedTernary | jax.Array", *,
     Deprecation shim for an ``op='cim'`` plan.
     """
     _warn_legacy("cim_matmul", {"interpret": interpret, "bm": bm,
-                                "bn": bn, "bk": bk})
+                                "bn": bn, "bk": bk}, stacklevel=1)
     plan = plan_matmul(shape_of(x, w), op="cim", interpret=interpret,
                        bm=bm, bn=bn, bk=bk, adc_bits=adc_bits,
                        num_trits=num_trits)

@@ -36,8 +36,15 @@ OPS = ("ternary", "cim")
 DOMAINS = ("float", "int8")
 PACKINGS = ("base3", "trit2")
 PHASES = ("auto", "decode", "prefill")
+KV_LAYOUTS = ("dense", "paged")
 
 CIM_DEFAULT_BLOCKS = (128, 128, 128)    # kernels.cim_mac defaults
+
+# Bounded plan-cache size: varied-shape traffic (paged serving widens the
+# set of (M, K, N) keys a long-lived process resolves) must not grow the
+# resolution cache without bound.  2^12 plans cover every (shape x request)
+# cell a production sweep touches; eviction only ever costs a re-resolve.
+PLAN_CACHE_SIZE = 4096
 
 
 def check_choice(kind: str, value: Any, choices) -> None:
@@ -58,10 +65,13 @@ class ExecutionPlan:
     ``blocks`` is the (bm, bn, bk) tile choice for block-tiled backends
     (pallas) and None for backends that tile internally (xla, ref).
     ``interpret`` is resolved once at plan time (True off-TPU).
-    ``phase`` is advisory metadata today (blocks are shape-resolved);
-    it is the seam where paged-KV / autotuned plans specialize later.
-    ``adc_bits`` / ``num_trits`` are set for the macro-exact ``cim`` op
-    only.
+    ``phase`` is advisory metadata today (blocks are shape-resolved).
+    ``kv_layout`` names the KV-cache layout the surrounding serving loop
+    feeds this matmul from (``dense`` slot caches or the ``paged`` block
+    pool): backends declare which layouts they can be planned under, so
+    paged serving is a registered executor capability, not a kwarg
+    threaded through ops/serve.  ``adc_bits`` / ``num_trits`` are set
+    for the macro-exact ``cim`` op only.
     """
     op: str                                  # ternary | cim
     backend: str                             # resolved name (never 'auto')
@@ -73,6 +83,7 @@ class ExecutionPlan:
     phase: str = "auto"                      # auto | decode | prefill
     blocks: Optional[tuple] = None           # (bm, bn, bk) | None
     interpret: bool = False
+    kv_layout: str = "dense"                 # dense | paged
     adc_bits: Optional[int] = None           # cim op only
     num_trits: Optional[int] = None          # cim op only
 
@@ -85,7 +96,8 @@ class ExecutionPlan:
         return {"backend": self.backend, "domain": self.domain,
                 "packing": self.packing, "phase": self.phase,
                 "blocks": list(self.blocks) if self.blocks else None,
-                "interpret": self.interpret}
+                "interpret": self.interpret,
+                "kv_layout": self.kv_layout}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +107,10 @@ class BackendSpec:
     ``runner(plan, x, w) -> y`` receives the resolved plan; selection
     never inspects the runner.  ``needs_blocks`` backends get (bm, bn,
     bk) resolved into the plan (shape-adaptive unless pinned).
+    ``kv_layouts`` is the set of KV-cache layouts the backend can be
+    planned under (``dense`` and/or ``paged``): a paged serving loop
+    requests ``kv_layout='paged'`` and a dense-only backend is rejected
+    at plan time instead of silently reading a layout it cannot.
     """
     name: str
     ops: frozenset
@@ -104,11 +120,13 @@ class BackendSpec:
     priority: int
     runner: Callable
     needs_blocks: bool = False
+    kv_layouts: frozenset = frozenset({"dense"})
 
     def supports(self, op: str, domain: str, packing: str,
-                 platform: str) -> bool:
+                 platform: str, kv_layout: str = "dense") -> bool:
         return (op in self.ops and domain in self.domains
-                and packing in self.packings and platform in self.platforms)
+                and packing in self.packings and platform in self.platforms
+                and kv_layout in self.kv_layouts)
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -153,26 +171,29 @@ def get_backend(name: str) -> BackendSpec:
 
 def resolve_backend(op: str = "ternary", backend: str = "auto",
                     domain: str = "float", packing: str = "base3",
-                    platform: Optional[str] = None) -> BackendSpec:
+                    platform: Optional[str] = None,
+                    kv_layout: str = "dense") -> BackendSpec:
     """Capability match: 'auto' picks the highest-priority backend that
-    supports (op, domain, packing) on `platform`; an explicit name is
-    validated against its declared capabilities and fails loudly."""
+    supports (op, domain, packing, kv_layout) on `platform`; an explicit
+    name is validated against its declared capabilities and fails
+    loudly."""
     _ensure_builtin_backends()
     if platform is None:
         platform = _platform()
     if backend in (None, "auto"):
         cands = [s for s in _REGISTRY.values()
-                 if s.supports(op, domain, packing, platform)]
+                 if s.supports(op, domain, packing, platform, kv_layout)]
         if not cands:
             raise ValueError(
                 f"no registered backend supports op={op!r} domain={domain!r} "
-                f"packing={packing!r} on platform {platform!r}; registered: "
-                f"{backend_names()}")
+                f"packing={packing!r} kv_layout={kv_layout!r} on platform "
+                f"{platform!r}; registered: {backend_names()}")
         return max(cands, key=lambda s: s.priority)
     spec = get_backend(backend)
     for kind, value, have in (("op", op, spec.ops),
                               ("domain", domain, spec.domains),
                               ("packing mode", packing, spec.packings),
+                              ("kv layout", kv_layout, spec.kv_layouts),
                               ("platform", platform, spec.platforms)):
         if value not in have:
             raise ValueError(
@@ -202,14 +223,17 @@ def shape_of(x, w) -> tuple:
     return (m, int(x.shape[-1]), int(w.shape[-1]))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=PLAN_CACHE_SIZE)
 def _resolve(op, m, k, n, phase, backend, domain, packing, interpret,
-             bm, bn, bk, adc_bits, num_trits, platform) -> ExecutionPlan:
+             bm, bn, bk, kv_layout, adc_bits, num_trits,
+             platform) -> ExecutionPlan:
     check_choice("op", op, OPS)
     check_choice("phase", phase, PHASES)
     check_choice("domain", domain, DOMAINS)
     check_choice("packing mode", packing, PACKINGS)
-    spec = resolve_backend(op, backend, domain, packing, platform)
+    check_choice("kv layout", kv_layout, KV_LAYOUTS)
+    spec = resolve_backend(op, backend, domain, packing, platform,
+                           kv_layout)
     if interpret is None:
         interpret = default_interpret(platform)
     blocks = None
@@ -228,7 +252,8 @@ def _resolve(op, m, k, n, phase, backend, domain, packing, interpret,
     return ExecutionPlan(op=op, backend=spec.name, domain=domain,
                          packing=packing, m=m, k=k, n=n, phase=phase,
                          blocks=blocks, interpret=bool(interpret),
-                         adc_bits=adc_bits, num_trits=num_trits)
+                         kv_layout=kv_layout, adc_bits=adc_bits,
+                         num_trits=num_trits)
 
 
 def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
@@ -236,17 +261,21 @@ def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
                 domain: Optional[str] = None, packing: Optional[str] = None,
                 interpret: Optional[bool] = None, bm: Optional[int] = None,
                 bn: Optional[int] = None, bk: Optional[int] = None,
+                kv_layout: Optional[str] = None,
                 adc_bits: Optional[int] = None,
                 num_trits: Optional[int] = None) -> ExecutionPlan:
     """Resolve an :class:`ExecutionPlan` for a (M, K, N) matmul.
 
     ``cfg`` is any object carrying plan-request attributes (``backend``,
-    ``domain``, ``packing``, ``interpret`` — e.g. a
+    ``domain``, ``packing``, ``interpret``, ``kv_layout`` — e.g. a
     ``core.cim_linear.CIMConfig``); explicit keyword arguments override
-    it.  Resolution is cached on the full request, so calling this per
-    layer inside a jit trace costs a dict lookup; pass ``bm/bn/bk`` to
-    pin block shapes (tests, sweeps), otherwise block-tiled backends get
-    the shape-adaptive choice.  ``op='cim'`` plans the macro-exact CIM
+    it.  Resolution is cached on the full request (bounded at
+    ``PLAN_CACHE_SIZE`` entries — see ``plan_cache_info``), so calling
+    this per layer inside a jit trace costs a dict lookup; pass
+    ``bm/bn/bk`` to pin block shapes (tests, sweeps), otherwise
+    block-tiled backends get the shape-adaptive choice.
+    ``kv_layout='paged'`` requests a backend capable of running under
+    the paged KV block pool.  ``op='cim'`` plans the macro-exact CIM
     MAC (``adc_bits`` / ``num_trits`` default 5).
     """
     m, k, n = (int(s) for s in shape)
@@ -255,12 +284,15 @@ def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
         # (e.g. CIMConfig); bare attribute carriers work too
         req = (cfg.plan_request() if hasattr(cfg, "plan_request") else
                {f: getattr(cfg, f, None)
-                for f in ("backend", "domain", "packing", "interpret")})
+                for f in ("backend", "domain", "packing", "interpret",
+                          "kv_layout")})
         backend = backend if backend is not None else req.get("backend")
         domain = domain if domain is not None else req.get("domain")
         packing = packing if packing is not None else req.get("packing")
         interpret = (interpret if interpret is not None
                      else req.get("interpret"))
+        kv_layout = (kv_layout if kv_layout is not None
+                     else req.get("kv_layout"))
     if op == "cim":
         adc_bits = 5 if adc_bits is None else adc_bits
         num_trits = 5 if num_trits is None else num_trits
@@ -269,11 +301,14 @@ def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
                     "auto" if backend is None else backend,
                     "float" if domain is None else domain,
                     "base3" if packing is None else packing,
-                    interpret, bm, bn, bk, adc_bits, num_trits,
-                    _platform())
+                    interpret, bm, bn, bk,
+                    "dense" if kv_layout is None else kv_layout,
+                    adc_bits, num_trits, _platform())
 
 
 def plan_cache_info():
+    """CacheInfo of the bounded plan-resolution cache (hits, misses,
+    ``maxsize == PLAN_CACHE_SIZE``, currsize)."""
     return _resolve.cache_info()
 
 

@@ -46,6 +46,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              opt_name: str = "auto", ep: str = "model", sp: bool = False,
              pure_dp: bool = False, kv_cache: str = "",
              decode_loop: int = 0, continuous: int = 0,
+             kv_layout: str = "dense", page_size: int = 16,
              extra_tags: dict | None = None) -> dict:
     from repro import configs
     from repro.configs.shapes import SHAPES, runnable
@@ -54,6 +55,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
                                           abstract_model_params,
                                           decode_loop_specs,
                                           decode_token_spec,
+                                          paged_pool_specs,
                                           prefill_batch_specs,
                                           slot_pool_specs,
                                           train_batch_specs)
@@ -147,7 +149,36 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
         tokens = cell.global_batch * cell.seq_len
     else:                                   # decode
         params_abs = abstract_model_params(model, rules, mesh, packed)
-        if continuous:
+        if kv_layout == "paged" and not continuous:
+            raise ValueError("--kv paged requires --continuous SLOTS "
+                             "(the paged pool is a continuous-batching "
+                             "slot-pool layout)")
+        if continuous and kv_layout == "paged":
+            # paged-KV slot pool: lower one chunked round of the paged
+            # scheduler loop (serve.make_paged_decode_loop) — the page
+            # pool on a 'page' logical axis, per-slot page tables +
+            # write positions, one host transfer per chunk.
+            from repro.serve import make_paged_decode_loop
+            chunk = decode_loop if decode_loop >= 1 else 8
+            pages_per_slot = -(-cell.seq_len // page_size)
+            num_pages = 1 + continuous * pages_per_slot
+            (pool_abs, table_abs, pos_abs, tok_abs, live_abs, made_abs,
+             fresh_abs, mn_abs, eos_abs) = paged_pool_specs(
+                model, cell, rules, mesh, continuous, page_size,
+                num_pages)
+            loop_fn = make_paged_decode_loop(
+                model, chunk, cim,
+                spmd_axes=shd.slot_spmd_axes(rules, mesh, continuous))
+            lowered = loop_fn.lower(params_abs, tok_abs, pool_abs,
+                                    table_abs, pos_abs, live_abs,
+                                    made_abs, fresh_abs, mn_abs, eos_abs)
+            tokens = continuous * chunk
+            meta["continuous_slots"] = continuous
+            meta["chunk"] = chunk
+            meta["kv_layout"] = "paged"
+            meta["page_size"] = page_size
+            meta["num_pages"] = num_pages
+        elif continuous:
             # continuous-batching slot pool: lower one chunked decode
             # round (serve.make_chunked_decode_loop) — per-slot batch-1
             # states at independent positions, slot axis folded over DP,
@@ -299,10 +330,19 @@ def main(argv=None):
                    help="decode cells: lower one chunked round of the "
                         "continuous-batching slot pool with this many "
                         "slots (chunk budget = --decode-loop, default 8)")
+    p.add_argument("--kv", default="dense", choices=("dense", "paged"),
+                   help="slot-pool KV layout for --continuous: dense "
+                        "per-slot caches or the paged block pool "
+                        "(serve.make_paged_decode_loop)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="positions per KV page for --kv paged")
     p.add_argument("--out-dir", default=DEFAULT_OUT)
     p.add_argument("--tag", default=None,
                    help="suffix for the output file (perf experiments)")
     args = p.parse_args(argv)
+    if args.kv == "paged" and not args.continuous:
+        p.error("--kv paged requires --continuous SLOTS (the paged "
+                "pool is a continuous-batching slot-pool layout)")
 
     if args.all:
         fails = sweep(args.out_dir, multi_pod_too=not args.single_pod_only,
@@ -318,7 +358,8 @@ def main(argv=None):
                        opt_name=args.opt, ep=args.ep, sp=args.sp,
                        pure_dp=args.pure_dp, kv_cache=args.kv_cache,
                        decode_loop=args.decode_loop,
-                       continuous=args.continuous)
+                       continuous=args.continuous, kv_layout=args.kv,
+                       page_size=args.page_size)
     except Exception:
         traceback.print_exc()
         sys.exit(1)

@@ -112,6 +112,40 @@ def abstract_cache(model, cell: ShapeCell, rules, mesh):
     return abstract_params(defs, model.cfg.dtype, mk)
 
 
+def paged_pool_specs(model, cell: ShapeCell, rules, mesh, slots: int,
+                     page_size: int, num_pages: int):
+    """Inputs of serve.make_paged_decode_loop beyond params: the paged
+    KV block pool (pages on a leading 'page' logical axis, folded over
+    the DP mesh axes — the page-pool mirror of the slot specs), the
+    per-slot page tables / write positions, and the control lanes."""
+    from repro.models.paged_kv import PagedKVCache
+
+    cfg = model.cfg
+    L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+    int8 = cfg.kv_cache_dtype == "int8"
+    kvdt = jnp.int8 if int8 else cfg.dtype
+    pshape = (L, num_pages, page_size, kv, hd)
+    paxes = ("layers", "page", "none", "kv", "none")
+    pool = {"k_pages": _sds(pshape, kvdt, paxes, rules, mesh),
+            "v_pages": _sds(pshape, kvdt, paxes, rules, mesh)}
+    if int8:
+        sshape, saxes = pshape[:-1], paxes[:-1]
+        pool["k_scale_pages"] = _sds(sshape, jnp.float32, saxes, rules,
+                                     mesh)
+        pool["v_scale_pages"] = _sds(sshape, jnp.float32, saxes, rules,
+                                     mesh)
+    pool_abs = PagedKVCache(pool["k_pages"], pool["v_pages"],
+                            pool.get("k_scale_pages"),
+                            pool.get("v_scale_pages"))
+    pages_per_slot = -(-cell.seq_len // page_size)
+    table = _sds((slots, pages_per_slot), jnp.int32, ("slot", "none"),
+                 rules, mesh)
+    lane = lambda dt: _sds((slots,), dt, ("slot",), rules, mesh)
+    return (pool_abs, table, lane(jnp.int32), lane(jnp.int32),
+            lane(jnp.bool_), lane(jnp.int32), lane(jnp.bool_),
+            lane(jnp.int32), lane(jnp.int32))
+
+
 def slot_pool_specs(model, cell: ShapeCell, rules, mesh, slots: int):
     """Inputs of serve.make_chunked_decode_loop beyond params: the
     pooled decode state (per-slot batch-1 caches stacked on a leading

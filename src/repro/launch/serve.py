@@ -57,6 +57,16 @@ def main(argv=None):
                         "--max-batch)")
     p.add_argument("--chunk", type=int, default=8,
                    help="decode steps per scheduling round (host yield)")
+    p.add_argument("--kv", default="dense", choices=("dense", "paged"),
+                   help="--continuous KV layout: dense per-slot caches "
+                        "or the paged, prefix-shared block pool")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="positions per KV page for --kv paged")
+    p.add_argument("--num-pages", type=int, default=0,
+                   help="page-pool size for --kv paged (0 = the "
+                        "dense-pool equivalent: slots x capacity / "
+                        "page size usable pages, + 1 for the reserved "
+                        "null page)")
     p.add_argument("--arrival-rate", type=float, default=0.0,
                    help="Poisson request arrivals per second (0 = all "
                         "requests available at t=0)")
@@ -66,12 +76,16 @@ def main(argv=None):
                         "--requests/--prompt-len/--max-new/--arrival-rate)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+    if args.kv == "paged" and not args.continuous:
+        p.error("--kv paged requires --continuous (the paged pool is a "
+                "continuous-batching slot-pool layout)")
 
     from repro import configs
     from repro.core.cim_linear import CIMConfig, hbm_bytes, ternarize_params
     from repro.models import registry
-    from repro.serve import (Request, Scheduler, ServeEngine, latency_stats,
-                             load_trace, make_trace, poisson_arrivals)
+    from repro.serve import (PagedScheduler, Request, Scheduler,
+                             ServeEngine, latency_stats, load_trace,
+                             make_trace, poisson_arrivals)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     model = registry.build(cfg)
@@ -107,7 +121,13 @@ def main(argv=None):
                                     seed=args.seed)
         trace = make_trace(arrivals, [args.prompt_len], [args.max_new])
 
-    if args.continuous:
+    if args.continuous and args.kv == "paged":
+        eng = PagedScheduler(model, params, capacity=args.capacity,
+                             slots=args.slots or args.max_batch,
+                             chunk=args.chunk, page_size=args.page_size,
+                             num_pages=args.num_pages or None,
+                             cim=cim, extra_inputs=extra)
+    elif args.continuous:
         eng = Scheduler(model, params, capacity=args.capacity,
                         slots=args.slots or args.max_batch,
                         chunk=args.chunk, cim=cim, extra_inputs=extra)
@@ -150,6 +170,13 @@ def main(argv=None):
         out.update(decode_loop="continuous", slots=eng.slots,
                    chunk=eng.chunk, chunks=eng.chunks_run,
                    slot_occupancy=round(eng.slot_occupancy, 3))
+        if args.kv == "paged":
+            out.update(kv="paged", page_size=eng.page_size,
+                       num_pages=eng.num_pages,
+                       pages_in_use_peak=eng.allocator.peak_in_use,
+                       kv_bytes_pool=eng.kv_bytes(),
+                       kv_bytes_resident_peak=eng.kv_bytes_resident_peak,
+                       prefix_hit_rate=round(eng.prefix_hit_rate, 3))
     else:
         out["decode_loop"] = "legacy" if args.legacy_loop else "device"
     print(json.dumps(out))

@@ -36,8 +36,19 @@ def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 
 def init_cache(batch: int, capacity: int, kv_heads: int, hd: int,
-               dtype=jnp.bfloat16) -> KVCache:
+               dtype=jnp.bfloat16, kv_cache_dtype: str = "") -> KVCache:
+    """Zero-initialized KV cache.  ``kv_cache_dtype='int8'`` allocates
+    the int8 code buffers AND their per-(B, C, KV) f32 scale buffers up
+    front — ``registry`` gates its int8 read path on the scales being
+    present, so a cache built without them would fail mid-decode."""
     shape = (batch, capacity, kv_heads, hd)
+    if kv_cache_dtype == "int8":
+        # distinct buffers: k/v scale leaves are donated independently
+        return KVCache(jnp.zeros(shape, jnp.int8),
+                       jnp.zeros(shape, jnp.int8),
+                       jnp.zeros((), jnp.int32),
+                       jnp.zeros(shape[:-1], jnp.float32),
+                       jnp.zeros(shape[:-1], jnp.float32))
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
                    jnp.zeros((), jnp.int32))
 
@@ -83,9 +94,17 @@ def flash_attention(q, k, v, cfg: ModelConfig, causal: bool = True,
     materializes the (S, T) score matrix; per-step footprint is
     O(B·H·S·chunk).  Required for the 32k cells (32k² scores would be TBs).
 
-    q (B,S,H,hd); k/v (B,T,KV,hd); masks (causal and/or sliding window)
-    are rebuilt per chunk from positions, so no (S,T) mask exists either.
+    q (B,S,H,hd); k/v (B,T,KV,hd) or ``paged_kv.PagedKV`` gather-views.
+    Paged operands are materialized up front — the gather costs one
+    dense copy of K/V, so the paged layout's residency saving does NOT
+    extend through this function; a per-chunk page gather (a
+    layout-specialized ``kv_layout='paged'`` executor) is the seam for
+    that.  Masks (causal and/or sliding window) are rebuilt per chunk
+    from positions, so no (S,T) mask exists either.
     """
+    from . import paged_kv
+    k = paged_kv.materialize(k)
+    v = paged_kv.materialize(v)
     b, s, h, hd = q.shape
     t = k.shape[1]
     kv = k.shape[2]
@@ -149,7 +168,13 @@ def _constrain_qkv(q, k, v):
 
 
 def attend(q, k, v, cfg: ModelConfig, causal: bool = True, q_offset=0):
-    """Dispatch: direct masked attention for short sequences, flash above."""
+    """Dispatch: direct masked attention for short sequences, flash
+    above.  ``k``/``v`` may be ``paged_kv.PagedKV`` gather-views — the
+    paged layout gathers into the dense (B, T, KV, hd) operand here, so
+    both branches (and their outputs) are identical to dense K/V."""
+    from . import paged_kv
+    k = paged_kv.materialize(k)
+    v = paged_kv.materialize(v)
     q, k, v = _constrain_qkv(q, k, v)
     s, t = q.shape[1], k.shape[1]
     if max(s, t) <= FLASH_THRESHOLD:

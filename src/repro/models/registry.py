@@ -95,6 +95,25 @@ class BaseModel:
     def decode(self, params, token: jax.Array, state: Any, cim=None):
         raise NotImplementedError
 
+    # --- paged KV (serve.PagedScheduler) ------------------------------
+    @property
+    def supports_paged_kv(self) -> bool:
+        """Whether decode can run against the paged KV block pool
+        (models/paged_kv.py).  Families whose decode state is not a
+        plain per-position KV cache (SSM carries, tied cross caches)
+        serve from the dense slot pool."""
+        return False
+
+    def decode_paged(self, params, token, pool, page_table, pos,
+                     cim=None):
+        """Read-only one-token decode against a gathered page view:
+        returns (logits, k_new, v_new) — the cache write is the
+        scheduler's page scatter (paged_kv.append_tokens)."""
+        raise NotImplementedError(
+            f"paged KV decode is not implemented for "
+            f"{type(self).__name__} (family {self.cfg.family!r}); "
+            f"serve it from the dense slot pool")
+
     # --- common -------------------------------------------------------
     def init(self, key: jax.Array, dtype=None):
         return init_params(key, self.param_defs, dtype or self.cfg.dtype)
@@ -332,25 +351,13 @@ class TransformerLM(BaseModel):
         x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
         return dense(x, params["unembed"], cim), state
 
-    def decode(self, params, token, state, cim=None):
+    def _decode_read_scan(self, params, x, state, cim):
+        """Read-only decode layer scan: attend over the (stale) cached
+        KV + the fresh token, collect every layer's new k/v for ONE
+        batched write.  ``state`` is either the dense cache dict or a
+        paged gather-view (paged_kv.slot_view) — same layout, so the
+        dense and paged decode paths share this graph bit-for-bit."""
         cfg = self.cfg
-        x = _take_embed(params["embed"], token).astype(cfg.dtype)
-
-        if cfg.cross_attn_every:                 # vlm: grouped path
-            def step(x, wl, cache, _, cim):
-                xa = rms_norm(x, wl["ln1"], cfg.norm_eps)
-                out, newc = attn.decode_attention(xa, wl, cfg, cache, cim)
-                x = x + out
-                m, _ = self._mlp(rms_norm(x, wl["ln2"], cfg.norm_eps), wl,
-                                 cim)
-                return x + m, newc
-
-            x, ks, vs = self._scan_cached(x, params, state, step, cim)
-            new_state = dict(state, k=ks, v=vs, pos=state["pos"] + 1)
-            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-            return dense(x, params["unembed"], cim), new_state
-
-        # read-only layer scan + ONE batched in-place cache write
         int8_kv = cfg.kv_cache_dtype == "int8"
 
         def body(x, inp):
@@ -371,6 +378,58 @@ class TransformerLM(BaseModel):
         if int8_kv:
             xs = xs + (state["k_scale"], state["v_scale"])
         x, (kts, vts) = jax.lax.scan(body, x, xs)
+        return x, kts, vts
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        # the vlm grouped path fuses its cache write into the layer
+        # scan, and sliding-window models decode against a ROLLING
+        # cache (slot = pos % window, engaged only when cap == window)
+        # that a page-gathered view's capacity would silently disarm;
+        # only the plain full-cache read-then-write decode pages cleanly
+        return not self.cfg.cross_attn_every and \
+            not self.cfg.sliding_window
+
+    def decode_paged(self, params, token, pool, page_table, pos,
+                     cim=None):
+        """One-token decode against the paged page pool: gather the
+        slot's page-table row into the dense cache layout
+        (paged_kv.slot_view) and run the shared read-only scan.
+        Returns (logits, kts (L, 1, 1, KV, hd), vts) in COMPUTE dtype —
+        the scheduler scatters them into pages (and quantizes for
+        int8-KV pools), mirroring ``decode``'s dense write."""
+        if not self.supports_paged_kv:
+            return super().decode_paged(params, token, pool, page_table,
+                                        pos, cim)
+        from . import paged_kv
+        cfg = self.cfg
+        view = paged_kv.slot_view(pool, page_table, pos)
+        x = _take_embed(params["embed"], token).astype(cfg.dtype)
+        x, kts, vts = self._decode_read_scan(params, x, view, cim)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return dense(x, params["unembed"], cim), kts, vts
+
+    def decode(self, params, token, state, cim=None):
+        cfg = self.cfg
+        x = _take_embed(params["embed"], token).astype(cfg.dtype)
+
+        if cfg.cross_attn_every:                 # vlm: grouped path
+            def step(x, wl, cache, _, cim):
+                xa = rms_norm(x, wl["ln1"], cfg.norm_eps)
+                out, newc = attn.decode_attention(xa, wl, cfg, cache, cim)
+                x = x + out
+                m, _ = self._mlp(rms_norm(x, wl["ln2"], cfg.norm_eps), wl,
+                                 cim)
+                return x + m, newc
+
+            x, ks, vs = self._scan_cached(x, params, state, step, cim)
+            new_state = dict(state, k=ks, v=vs, pos=state["pos"] + 1)
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            return dense(x, params["unembed"], cim), new_state
+
+        # read-only layer scan + ONE batched in-place cache write
+        int8_kv = cfg.kv_cache_dtype == "int8"
+        x, kts, vts = self._decode_read_scan(params, x, state, cim)
         cap = state["k"].shape[2]
         rolling = cfg.sliding_window and cap == cfg.sliding_window
         pos = state["pos"]

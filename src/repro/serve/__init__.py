@@ -1,7 +1,8 @@
-from .engine import (ServeEngine, Scheduler, Request, make_prefill_step,
-                     make_decode_step, make_decode_loop,
-                     make_chunked_decode_loop, make_admit_fn,
-                     init_slot_pool, latency_stats,
-                     greedy_sample)  # noqa: F401
+from .engine import (ServeEngine, Scheduler, PagedScheduler, Request,
+                     make_prefill_step, make_decode_step,
+                     make_decode_loop, make_chunked_decode_loop,
+                     make_admit_fn, make_paged_decode_loop,
+                     make_paged_admit_fn, init_slot_pool, latency_stats,
+                     percentile, greedy_sample)  # noqa: F401
 from .trace import (poisson_arrivals, bursty_arrivals, make_trace,
                     load_trace)  # noqa: F401

@@ -64,6 +64,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:
@@ -237,6 +238,104 @@ def make_admit_fn() -> Callable:
     return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
+# =====================================================================
+# paged KV: chunked decode over the page pool
+# =====================================================================
+
+def make_paged_decode_loop(model, chunk: int, cim=None, spmd_axes=None):
+    """``make_chunked_decode_loop`` over the paged KV block pool
+    (models/paged_kv.py): same chunk semantics, live-mask, budgets and
+    ONE device->host transfer per chunk, but the per-slot cache is a
+    page-table gather over a SHARED page pool instead of a private
+    dense ``(1, capacity)`` buffer.
+
+    fn(params, tok (P,), pool: PagedKVCache, page_table (P, W) int32,
+       pos (P,), live, made, fresh, max_new_row, eos_row) ->
+        (tok, pool, pos, live, made,
+         buf (P, chunk+1) int32, cnt (P,) int32, steps (), occ ())
+
+    Per decode step every slot runs the READ-only ``model.decode_paged``
+    (vmapped; the pool itself is broadcast, only the page-table row and
+    position map per slot), then ONE scatter appends all live slots'
+    new K/V tokens into their current pages
+    (``paged_kv.append_tokens``) — dead slots are routed to the null
+    page so a freed-and-reused page is never clobbered by a scratch
+    decode.  ``page_table`` is chunk-invariant (admission reserves every
+    page a request can touch up front), so it rides as an operand, not
+    loop state.  Tokens are bitwise identical to the dense pool: the
+    gathered view feeds the same read graph, and masked page garbage
+    contributes exactly zero (see models/paged_kv.py).
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    from repro.models import paged_kv
+
+    def read_one(params, pool, tok, pt_row, pos):
+        logits, kt, vt = model.decode_paged(params, tok[None, None], pool,
+                                            pt_row, pos, cim=cim)
+        return greedy_sample(logits)[0], kt[:, 0, 0], vt[:, 0, 0]
+
+    vread = jax.vmap(read_one, in_axes=(None, None, 0, 0, 0),
+                     spmd_axis_name=spmd_axes)
+
+    def chunk_step(params, tok, pool, page_table, pos, live, made, fresh,
+                   max_new_row, eos_row):
+        p = tok.shape[0]
+        rows = jnp.arange(p)
+        buf = jnp.zeros((p, chunk + 1), jnp.int32)
+        buf = buf.at[:, 0].set(jnp.where(fresh, tok, 0))
+        cnt = fresh.astype(jnp.int32)
+
+        def cond(carry):
+            step, live = carry[0], carry[4]
+            return jnp.any(live) & (step < chunk)
+
+        def body(carry):
+            step, tok, pool, pos, live, buf, cnt, made, occ = carry
+            occ = occ + jnp.sum(live.astype(jnp.int32))
+            tok_new, kts, vts = vread(params, pool, tok, page_table, pos)
+            pool = paged_kv.append_tokens(pool, kts, vts, page_table,
+                                          pos, live)
+            tok = tok_new
+            pos = pos + 1
+            buf = buf.at[rows, cnt].set(
+                jnp.where(live, tok, buf[rows, cnt]))
+            cnt = cnt + live.astype(jnp.int32)
+            made = made + live.astype(jnp.int32)
+            live = live & (made < max_new_row) & (tok != eos_row)
+            return step + 1, tok, pool, pos, live, buf, cnt, made, occ
+
+        zero = jnp.zeros((), jnp.int32)
+        (steps, tok, pool, pos, live, buf, cnt, made,
+         occ) = jax.lax.while_loop(
+            cond, body, (zero, tok, pool, pos, live, buf, cnt, made,
+                         zero))
+        return tok, pool, pos, live, made, buf, cnt, steps, occ
+
+    # no donation: the while_loop carries the pool internally (same as
+    # the dense chunked loop)
+    return jax.jit(chunk_step)
+
+
+def make_paged_admit_fn() -> Callable:
+    """Lane-only admission scatter for the paged scheduler: the KV state
+    lands in the page pool via ``paged_kv.write_prompt_pages``; here we
+    arm the control lanes and the slot's write position (= prompt
+    length).  Same initial-liveness rule as the dense pools."""
+    def admit(tok, live, made, fresh, max_new_row, eos_row, pos,
+              slot, tok0, max_new, eos_id, prompt_len):
+        t0 = tok0[0]
+        tok = tok.at[slot].set(t0)
+        made = made.at[slot].set(1)
+        live = live.at[slot].set((1 < max_new) & (t0 != eos_id))
+        fresh = fresh.at[slot].set(True)
+        max_new_row = max_new_row.at[slot].set(max_new)
+        eos_row = eos_row.at[slot].set(eos_id)
+        pos = pos.at[slot].set(prompt_len)
+        return tok, live, made, fresh, max_new_row, eos_row, pos
+    return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -257,13 +356,24 @@ def _batch_inputs(reqs: list, extra_inputs: dict) -> dict:
     return batch
 
 
+def percentile(vals: list, q: float) -> float:
+    """Linear interpolation between order statistics (numpy's default
+    method).  The previous nearest-rank rounding (``int(q*(n-1)+0.5)``)
+    made small-sample p99 degenerate to the sample max — for n <= 50
+    every q > ~0.5 + 1/(2(n-1)) picked the last element — which biased
+    the continuous-vs-bucket p99 bench gate toward whichever driver's
+    single worst request was smaller."""
+    return float(np.percentile(vals, 100.0 * q))
+
+
 def latency_stats(reqs: list) -> dict:
-    """p50/p99/mean request latency (trace runs: completion - arrival)."""
+    """p50/p99/mean request latency (trace runs: completion - arrival);
+    percentiles interpolate between order statistics (``percentile``)."""
     lat = sorted(r.latency_s for r in reqs)
     if not lat:
         return {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
-    pick = lambda q: lat[min(int(q * (len(lat) - 1) + 0.5), len(lat) - 1)]
-    return {"p50_s": round(pick(0.50), 4), "p99_s": round(pick(0.99), 4),
+    return {"p50_s": round(percentile(lat, 0.50), 4),
+            "p99_s": round(percentile(lat, 0.99), 4),
             "mean_s": round(sum(lat) / len(lat), 4)}
 
 
@@ -484,11 +594,7 @@ class Scheduler(_EngineBase):
         self.chunk = chunk
         self._clock = clock
         self._sleep = sleep
-        self._chunk_fn = make_chunked_decode_loop(model, chunk, self.cim,
-                                                  spmd_axes)
-        self._admit_fn = make_admit_fn()
-        # device-side pool: per-slot state + control lanes
-        self.pool = init_slot_pool(model, slots, capacity)
+        # control lanes shared by the dense and paged pools
         self.tok = jnp.zeros((slots,), jnp.int32)
         self.live = jnp.zeros((slots,), jnp.bool_)
         self.made = jnp.zeros((slots,), jnp.int32)
@@ -500,8 +606,29 @@ class Scheduler(_EngineBase):
         self.chunks_run = 0
         self.decode_steps = 0
         self.occupied_slot_steps = 0
+        self._init_pool(model, spmd_axes)
 
-    def _admit(self, req: Request, slot: int):
+    # subclass hook: allocate the device pool + compile the chunk loop
+    def _init_pool(self, model, spmd_axes):
+        self._chunk_fn = make_chunked_decode_loop(model, self.chunk,
+                                                  self.cim, spmd_axes)
+        self._admit_fn = make_admit_fn()
+        # device-side pool: per-slot dense batch-1 states
+        self.pool = init_slot_pool(model, self.slots, self.capacity)
+
+    def kv_bytes(self) -> int:
+        """Device bytes of the pool's KV leaves (codes + scales) — the
+        resident-memory quantity the paged pool competes on.  The dense
+        pool is always fully resident: every slot holds its full
+        ``capacity`` whether or not a request occupies it."""
+        keys = ("k", "v", "k_scale", "v_scale")
+        return sum(int(v.nbytes) for k, v in self.pool.items()
+                   if k in keys and hasattr(v, "nbytes"))
+
+    def kv_bytes_resident(self) -> int:
+        return self.kv_bytes()
+
+    def _admit(self, req: Request, slot: int) -> bool:
         """Prefill one request and scatter its state into `slot` —
         entirely on device (tok0 is emitted by the next chunk)."""
         tok0, st = self._prefill(self.params,
@@ -515,51 +642,64 @@ class Scheduler(_EngineBase):
             jnp.asarray(req.max_new, jnp.int32),
             jnp.asarray(req.eos_id, jnp.int32))
         self._slot_req[slot] = req
+        return True
+
+    def _run_chunk(self):
+        """Advance the pool one chunk; returns (buf, cnt, steps, occ)
+        device handles (the round's single transfer happens in
+        ``_serve_round``)."""
+        (self.tok, self.pool, self.live, self.made, buf, cnt, steps,
+         occ) = self._chunk_fn(
+            self.params, self.tok, self.pool, self.live, self.made,
+            self.fresh, self.max_new_row, self.eos_row)
+        return buf, cnt, steps, occ
+
+    def _retire_slot(self, slot: int) -> None:
+        """Host bookkeeping when a slot's request completes (the paged
+        scheduler additionally returns the slot's pages here)."""
+        self._slot_req[slot] = None
+
+    def _serve_round(self, elapsed) -> None:
+        # one scheduling round: <= chunk decode steps on device, then
+        # ONE transfer carrying everything the host needs
+        occupied = [i for i, r in enumerate(self._slot_req)
+                    if r is not None]
+        buf, cnt, steps, occ = self._run_chunk()
+        self.fresh = jnp.zeros((self.slots,), jnp.bool_)
+        buf_h, cnt_h, live_h, steps_h, occ_h = self._device_get(
+            (buf, cnt, self.live, steps, occ))
+        self.chunks_run += 1
+        self.decode_steps += int(steps_h)
+        self.steps_run += int(steps_h)
+        self.occupied_slot_steps += int(occ_h)
+        done_t = elapsed()
+        for s in occupied:
+            req = self._slot_req[s]
+            req.out_tokens.extend(
+                int(t) for t in buf_h[s, : int(cnt_h[s])])
+            if not bool(live_h[s]):            # retire: slot freed for
+                req.done = True                # the next admission round
+                req.latency_s = done_t - req.arrival_s
+                self.completed.append(req)
+                self._retire_slot(s)
 
     def run(self) -> list[Request]:
         """Serve the whole queue continuously (the shared
         ``_arrival_pump``); returns completed requests."""
         def admit(req):
             # oldest arrived request into the first free slot, FIFO;
-            # defer admission (False) when the pool is full
+            # defer admission (False) when the pool is full — or, paged,
+            # when the page pool cannot cover the request yet
             free = [i for i, r in enumerate(self._slot_req) if r is None]
             if not free:
                 return False
-            self._admit(req, free[0])
-            return True
+            return self._admit(req, free[0])
 
         def busy():
             return any(r is not None for r in self._slot_req)
 
-        def serve_round(elapsed):
-            # one scheduling round: <= chunk decode steps on device,
-            # then ONE transfer carrying everything the host needs
-            occupied = [i for i, r in enumerate(self._slot_req)
-                        if r is not None]
-            (self.tok, self.pool, self.live, self.made, buf, cnt, steps,
-             occ) = self._chunk_fn(
-                self.params, self.tok, self.pool, self.live, self.made,
-                self.fresh, self.max_new_row, self.eos_row)
-            self.fresh = jnp.zeros((self.slots,), jnp.bool_)
-            buf_h, cnt_h, live_h, steps_h, occ_h = self._device_get(
-                (buf, cnt, self.live, steps, occ))
-            self.chunks_run += 1
-            self.decode_steps += int(steps_h)
-            self.steps_run += int(steps_h)
-            self.occupied_slot_steps += int(occ_h)
-            done_t = elapsed()
-            for s in occupied:
-                req = self._slot_req[s]
-                req.out_tokens.extend(
-                    int(t) for t in buf_h[s, : int(cnt_h[s])])
-                if not bool(live_h[s]):        # retire: slot freed for
-                    req.done = True            # the next admission round
-                    req.latency_s = done_t - req.arrival_s
-                    self.completed.append(req)
-                    self._slot_req[s] = None
-
         return self._arrival_pump(self._clock, self._sleep, admit, busy,
-                                  serve_round)
+                                  self._serve_round)
 
     @property
     def slot_occupancy(self) -> float:
@@ -568,3 +708,202 @@ class Scheduler(_EngineBase):
         maximize."""
         total = self.slots * self.decode_steps
         return self.occupied_slot_steps / total if total else 0.0
+
+
+class PagedScheduler(Scheduler):
+    """Continuous-batching scheduler over a paged, prefix-shared KV
+    block pool (models/paged_kv.py) instead of per-slot dense caches.
+
+    Identical scheduling semantics and transfer contract to
+    :class:`Scheduler` (bitwise-identical tokens — tests/test_paged.py),
+    but resident KV scales with the tokens actually held, not
+    ``slots x capacity``:
+
+      * the device pool is ``num_pages`` fixed-size pages shared by all
+        slots; per-slot page tables map a slot's positions onto pages;
+      * admission reserves every page the request can touch up front
+        (prompt + worst-case decode budget) — all-or-nothing, so a
+        request whose pages don't fit is DEFERRED (FIFO) rather than
+        OOM-ing mid-decode — runs the batch-1 prefill, and scatters its
+        KV into the fresh pages on device;
+      * full prompt pages whose hashed token prefix already resides in
+        the pool are mapped SHARED (refcounted, read-only — decode
+        never writes a page holding positions below the slot's write
+        point) instead of being written again: identical prefixes in a
+        trace cost one copy;
+      * retiring a slot releases its references; pages return to the
+        free list when the last reference drops.
+
+    When a ternary CIM config is supplied, it is re-resolved with
+    ``kv_layout='paged'`` so only kernel backends that declare the
+    paged capability are planned (src/repro/kernels/README.md).
+
+    ``capacity`` bounds one request's prompt + decode budget (rounded
+    up to a page multiple); ``num_pages`` defaults to the dense-pool
+    equivalent (``slots * capacity / page_size``) — pass a smaller pool
+    to cap resident KV below the dense baseline (admission then defers
+    under overload instead of over-allocating).
+    """
+
+    def __init__(self, model, params, capacity: int = 512,
+                 slots: int = 8, chunk: int = 8, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 share_prefix: bool = True, cim=None, extra_inputs=None,
+                 spmd_axes=None, clock=time.monotonic, sleep=time.sleep):
+        if not model.supports_paged_kv:
+            raise ValueError(
+                f"{type(model).__name__} (family "
+                f"{model.cfg.family!r}) does not support paged KV; "
+                f"use the dense-pool Scheduler")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        capacity = -(-capacity // page_size) * page_size
+        self.page_size = page_size
+        self.pages_per_slot = capacity // page_size
+        self.num_pages = (1 + slots * self.pages_per_slot
+                          if num_pages is None else num_pages)
+        self.share_prefix = share_prefix
+        if cim is not None:
+            cim = dataclasses.replace(cim, kv_layout="paged")
+        super().__init__(model, params, capacity=capacity, slots=slots,
+                         chunk=chunk, cim=cim, extra_inputs=extra_inputs,
+                         spmd_axes=spmd_axes, clock=clock, sleep=sleep)
+
+    def _init_pool(self, model, spmd_axes):
+        from repro.models import paged_kv
+        self._paged_kv = paged_kv
+        self._chunk_fn = make_paged_decode_loop(model, self.chunk,
+                                                self.cim, spmd_axes)
+        self._admit_fn = make_paged_admit_fn()
+        self._write_pages = jax.jit(paged_kv.write_prompt_pages,
+                                    donate_argnums=(0,))
+        self.pool = paged_kv.init_page_pool(model.cfg, self.num_pages,
+                                            self.page_size)
+        self.allocator = paged_kv.PageAllocator(self.num_pages,
+                                                self.page_size)
+        self.pos = jnp.zeros((self.slots,), jnp.int32)
+        # host-side page tables: uploaded per chunk (a host->device
+        # copy, not a device->host sync — the transfer contract counts
+        # the latter); row entries beyond a slot's reservation stay 0
+        # (the null page, masked by `pos` in the gather)
+        self._page_table = np.zeros((self.slots, self.pages_per_slot),
+                                    np.int32)
+        # device copy of the table, re-uploaded only after admission or
+        # retire edits it (not on every steady-state chunk)
+        self._page_table_dev = None
+        self._slot_pages: list[list] = [[] for _ in range(self.slots)]
+
+    # ------------------------------------------------------ accounting
+    def kv_bytes(self) -> int:
+        """Allocated device bytes of the page pool."""
+        return sum(int(leaf.nbytes) for leaf in self.pool
+                   if leaf is not None)
+
+    def kv_bytes_resident(self) -> int:
+        """Bytes of pages currently holding live KV."""
+        return self.allocator.pages_in_use * self.pool.page_bytes
+
+    @property
+    def kv_bytes_resident_peak(self) -> int:
+        return self.allocator.peak_in_use * self.pool.page_bytes
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.allocator.pages_in_use
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.allocator.prefix_hit_rate
+
+    # -------------------------------------------------------- admission
+    def _admit(self, req: Request, slot: int) -> bool:
+        from repro.models.paged_kv import prefix_key
+        ps = self.page_size
+        s_len = len(req.prompt)
+        # positions written: 0..S-1 (prefill) and S..S+max_new-2
+        # (decode feeds tok0 first; the last sampled token is never fed)
+        last_pos = s_len + req.max_new - 2 if req.max_new >= 2 else \
+            s_len - 1
+        n_total = last_pos // ps + 1
+        if n_total > self.pages_per_slot:
+            raise ValueError(
+                f"request uid={req.uid} needs {n_total} pages "
+                f"(prompt {s_len} + max_new {req.max_new}) but capacity "
+                f"{self.capacity} holds {self.pages_per_slot} per slot")
+        if n_total > self.num_pages - 1:
+            # deferring would busy-spin forever: even an empty pool can
+            # never privately satisfy this reservation
+            raise ValueError(
+                f"request uid={req.uid} needs {n_total} pages but the "
+                f"pool holds {self.num_pages - 1} usable pages "
+                f"(num_pages={self.num_pages}, page 0 reserved); size "
+                f"num_pages to cover one worst-case request")
+        prompt_np = np.asarray(req.prompt)
+        n_share = s_len // ps if self.share_prefix else 0
+        pages: list = [None] * n_total
+        keys = [prefix_key(prompt_np, j, ps) for j in range(n_share)]
+        shared = []
+        for j, key in enumerate(keys):
+            pid = self.allocator.lookup_prefix(key)
+            if pid is not None:
+                pages[j] = pid
+                shared.append(j)
+        missing = [j for j in range(n_total) if pages[j] is None]
+        fresh_ids = self.allocator.alloc(len(missing))
+        if fresh_ids is None:
+            # pool exhausted: roll back the prefix references (and
+            # their stats — the deferred retry will look them up again)
+            self.allocator.release([pages[j] for j in shared])
+            self.allocator.prefix_hits -= len(shared)
+            self.allocator.prefix_lookups -= n_share
+            return False
+        for j, pid in zip(missing, fresh_ids):
+            pages[j] = pid
+            if j < n_share:
+                self.allocator.register_prefix(keys[j], pid)
+        # device: batch-1 prefill, then scatter its KV into the fresh
+        # pages (shared hits already hold the identical bits)
+        tok0, st = self._prefill(self.params,
+                                 _batch_inputs([req], self.extra_inputs))
+        self.steps_run += 1
+        n_prompt = -(-s_len // ps)
+        hit = set(shared)
+        write_src = [j for j in range(n_prompt) if j not in hit]
+        if write_src:
+            self.pool = self._write_pages(
+                self.pool, st,
+                jnp.asarray([pages[j] for j in write_src], jnp.int32),
+                jnp.asarray(write_src, jnp.int32))
+        (self.tok, self.live, self.made, self.fresh, self.max_new_row,
+         self.eos_row, self.pos) = self._admit_fn(
+            self.tok, self.live, self.made, self.fresh,
+            self.max_new_row, self.eos_row, self.pos,
+            jnp.asarray(slot, jnp.int32), tok0,
+            jnp.asarray(req.max_new, jnp.int32),
+            jnp.asarray(req.eos_id, jnp.int32),
+            jnp.asarray(s_len, jnp.int32))
+        row = np.zeros((self.pages_per_slot,), np.int32)
+        row[:n_total] = pages
+        self._page_table[slot] = row
+        self._page_table_dev = None
+        self._slot_pages[slot] = pages
+        self._slot_req[slot] = req
+        return True
+
+    # ------------------------------------------------------ chunk round
+    def _run_chunk(self):
+        if self._page_table_dev is None:
+            self._page_table_dev = jnp.asarray(self._page_table)
+        (self.tok, self.pool, self.pos, self.live, self.made, buf, cnt,
+         steps, occ) = self._chunk_fn(
+            self.params, self.tok, self.pool, self._page_table_dev,
+            self.pos, self.live, self.made, self.fresh,
+            self.max_new_row, self.eos_row)
+        return buf, cnt, steps, occ
+
+    def _retire_slot(self, slot: int) -> None:
+        self.allocator.release(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._page_table[slot] = 0
+        self._page_table_dev = None
+        self._slot_req[slot] = None

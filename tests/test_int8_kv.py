@@ -53,3 +53,53 @@ def test_int8_kv_cache_defs_have_scales():
     assert defs["k"].dtype == jnp.int8
     assert defs["k_scale"].shape == (cfg.num_layers, 4, 128,
                                      cfg.num_kv_heads)
+
+
+def test_init_cache_allocates_int8_scale_buffers():
+    """ISSUE 5 satellite: attn.init_cache used to allocate no
+    k_scale/v_scale while registry gates its int8 read path on them."""
+    from repro.models.attention import init_cache
+    c = init_cache(2, 16, 4, 8, kv_cache_dtype="int8")
+    assert c.k.dtype == jnp.int8 and c.v.dtype == jnp.int8
+    assert c.k_scale is not None and c.v_scale is not None
+    assert c.k_scale.shape == (2, 16, 4) and c.k_scale.dtype == jnp.float32
+    # default float path unchanged
+    c = init_cache(2, 16, 4, 8)
+    assert c.k_scale is None and c.v_scale is None
+
+
+def test_int8_kv_scheduler_parity_mixed_lengths():
+    """Mixed-length int8-KV pools: the continuous Scheduler (dense slot
+    pool, scale buffers allocated up front on the slot axis) and the
+    PagedScheduler (scale pages alongside the KV pages) must both be
+    bitwise token-identical to the batch-1 bucket driver."""
+    from repro.serve import PagedScheduler, Request, Scheduler, ServeEngine
+    cfg = dataclasses.replace(configs.smoke("internlm2-1.8b"),
+                              dtype=jnp.float32, kv_cache_dtype="int8")
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+
+    def reqs():
+        return [Request(uid=i, prompt=jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 0, cfg.vocab_size),
+            max_new=mn)
+            for i, (plen, mn) in enumerate([(6, 4), (10, 6), (8, 3),
+                                            (6, 5)])]
+
+    def run(eng):
+        for r in reqs():
+            eng.submit(r)
+        return {r.uid: list(r.out_tokens) for r in eng.run()}
+
+    ref = run(ServeEngine(model, params, capacity=32, max_batch=1))
+    dense = Scheduler(model, params, capacity=32, slots=2, chunk=3)
+    # the slot pool carries int8 codes + f32 scale lanes from t=0
+    assert dense.pool["k"].dtype == jnp.int8
+    assert dense.pool["k_scale"].shape[0] == 2      # slot axis
+    assert run(dense) == ref
+    paged = PagedScheduler(model, params, capacity=32, slots=2, chunk=3,
+                           page_size=4)
+    assert paged.pool.k_pages.dtype == jnp.int8
+    assert paged.pool.k_scale_pages is not None     # scale pages up front
+    assert run(paged) == ref

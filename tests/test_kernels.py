@@ -273,3 +273,49 @@ class TestOpsWrappers:
         want = cim_core.cim_matmul(x, w)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-2, atol=2e-2)
+
+
+class TestPlanCacheAndShimFrames:
+    def test_plan_cache_is_bounded(self):
+        """ISSUE 5 satellite: plan resolution must not grow without
+        bound under varied-shape traffic (paged serving widens the
+        key set)."""
+        from repro.kernels.plan import PLAN_CACHE_SIZE
+        plan_cache_clear()
+        info = plan_cache_info()
+        assert info.maxsize == PLAN_CACHE_SIZE
+        # overfill with distinct shapes: currsize stays bounded and
+        # resolution keeps working (eviction, not failure)
+        for m in range(PLAN_CACHE_SIZE + 64):
+            plan_matmul((m + 1, 32, 16), backend="xla")
+        info = plan_cache_info()
+        assert info.currsize <= PLAN_CACHE_SIZE
+        assert info.misses >= PLAN_CACHE_SIZE + 64
+        plan_cache_clear()
+        assert plan_cache_info().currsize == 0
+
+    def test_shim_warning_points_at_caller(self):
+        """ISSUE 5 satellite: every deprecation shim must attribute its
+        warning to the USER's call site (this file), not ops.py or the
+        _warn_legacy helper."""
+        import repro.kernels.ops as ops_mod
+        x, pw = _operands()
+        xf = jax.random.normal(jax.random.PRNGKey(9), (6, 64))
+        wf = 0.05 * jax.random.normal(jax.random.PRNGKey(10), (64, 24))
+        shims = [
+            lambda: ops.ternary_matmul(x, pw, backend="xla"),
+            lambda: ops.ternary_matmul_int8(x, pw, backend="xla"),
+            lambda: ops.cim_matmul(xf, wf, interpret=True,
+                                   bm=8, bn=8, bk=16),
+        ]
+        for shim in shims:
+            with pytest.warns(DeprecationWarning) as rec:
+                shim()
+            dep = [w for w in rec
+                   if w.category is DeprecationWarning
+                   and "plan_matmul" in str(w.message)]
+            assert dep, "shim did not warn"
+            assert dep[0].filename == __file__, (
+                f"warning attributed to {dep[0].filename}, "
+                f"not the caller ({__file__})")
+            assert dep[0].filename != ops_mod.__file__

@@ -107,3 +107,39 @@ def test_packed_xla_backend_matches_pallas_interpret():
     lx, _ = model.prefill(packed, batch, 16, cim=cim_x)
     assert jnp.allclose(lp.astype(jnp.float32), lx.astype(jnp.float32),
                         atol=1e-3, rtol=1e-3)
+
+
+# ------------------------------------------------- latency percentiles
+
+def test_latency_stats_interpolates_percentiles():
+    """Linear interpolation between order statistics (ISSUE 5
+    satellite): the old nearest-rank ``int(q*(n-1)+0.5)`` made every
+    small-sample p99 degenerate to the max.  Pin exact values for known
+    inputs."""
+    from repro.serve import latency_stats, percentile
+
+    def stats(vals):
+        rs = [Request(uid=i, prompt=None) for i in range(len(vals))]
+        for r, v in zip(rs, vals):
+            r.latency_s = v
+        return latency_stats(rs)
+
+    s = stats([1.0, 2.0, 3.0, 4.0, 5.0])
+    assert s["p50_s"] == 3.0
+    assert s["p99_s"] == 4.96            # 4 + 0.96*(5-4), not the max
+    assert s["mean_s"] == 3.0
+
+    s = stats([0.0, 10.0])
+    assert s["p50_s"] == 5.0             # interpolated midpoint
+    assert s["p99_s"] == 9.9
+
+    assert stats([7.0]) == {"p50_s": 7.0, "p99_s": 7.0, "mean_s": 7.0}
+    assert stats([]) == {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+
+    lat = sorted([3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.3, 5.8])
+    assert percentile(lat, 0.0) == lat[0]
+    assert percentile(lat, 1.0) == lat[-1]
+    # monotone in q
+    qs = [i / 20 for i in range(21)]
+    vals = [percentile(lat, q) for q in qs]
+    assert vals == sorted(vals)

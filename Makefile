@@ -5,7 +5,7 @@
 # reproducible regardless of the caller's environment.
 XLA_DEVICES ?= 8
 
-.PHONY: verify test test-fast ci dryrun-smoke bench
+.PHONY: verify test test-fast ci analyze dryrun-smoke bench
 
 verify: test
 
@@ -19,9 +19,18 @@ test:
 test-fast:
 	XLA_DEVICES=$(XLA_DEVICES) scripts/verify.sh -m "not slow"
 
-# the full CI pipeline locally: tier-1 suite + the bench schema gate —
-# exactly what .github/workflows/ci.yml runs (as separate jobs)
-ci: test bench
+# the full CI pipeline locally: analysis gate + tier-1 suite + the
+# bench schema gate — exactly what .github/workflows/ci.yml runs (as
+# separate jobs)
+ci: analyze test bench
+
+# static contract checker + sanitizer (src/repro/analysis/README.md):
+# capability lattice vs the kernels README matrix, pallas block/index
+# maps, the serve transfer/retrace contract, and the AST lint — exits
+# nonzero on any finding. Same offline fake-device env as the tests.
+analyze:
+	XLA_FLAGS="--xla_force_host_platform_device_count=$(XLA_DEVICES)" \
+	    PYTHONPATH=src python -m repro.analysis
 
 # perf-trajectory benchmarks (kernel_bench + wallclock, reduced sweeps)
 # under the same 8-fake-device env as the tests; fails if the tracked

@@ -1,0 +1,41 @@
+"""Static contract checker + sanitizer for plans, kernels, and serve
+loops (`python -m repro.analysis`, `make analyze`).
+
+Four passes, each a ``run() -> list[Finding]``:
+
+  * ``capability`` — the (op x backend x domain x packing x kv_layout
+    x platform) lattice from the live kernel registry: declared cells
+    resolve and abstract-eval, undeclared cells fail loudly, and the
+    markdown matrix in src/repro/kernels/README.md matches.
+  * ``blockmap`` — ``select_block_shapes`` outputs over a shape sweep:
+    alignment, exact grid coverage, in-bounds index maps, VMEM budget,
+    and the padded-region masking identities.
+  * ``sanitize`` — the serve transfer/retrace contract: exactly one
+    device->host transfer per chunk, zero retraces after warmup, on
+    both ``Scheduler`` and ``PagedScheduler``.  The :func:`sanitize`
+    context manager is also importable for tests.
+  * ``lint`` — AST rules for the standing constraints (no blind
+    except swallows, no device_get outside the audited chokepoint, no
+    routing kwargs around the plan API, no unseeded benchmark RNG).
+
+Rule catalog and suppression syntax: src/repro/analysis/README.md.
+"""
+from .base import Finding, rel  # noqa: F401
+from .sanitizer import (SanitizeError, SanitizeReport,  # noqa: F401
+                        sanitize)
+from . import blockmap, capability, lint, sanitizer  # noqa: F401
+
+# CLI/run order: cheap static passes first, the model-building
+# sanitizer last
+PASSES = (("capability", capability.run),
+          ("blockmap", blockmap.run),
+          ("lint", lint.run),
+          ("sanitize", sanitizer.run))
+
+
+def run_all() -> list:
+    """All four passes with default settings; the aggregate findings."""
+    findings = []
+    for _, fn in PASSES:
+        findings.extend(fn())
+    return findings

@@ -1,0 +1,102 @@
+"""CLI for the analysis passes: ``python -m repro.analysis``.
+
+Exit status is the number of findings (capped at 125), so any
+violation fails CI.  ``--inject-*`` / ``--pin-blocks`` seed violations
+on purpose — they exist so tests (and curious humans) can watch each
+pass actually catch its failure category.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import PASSES, blockmap, capability, lint, sanitizer
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checker + sanitizer "
+                    "(src/repro/analysis/README.md)")
+    p.add_argument("--passes", default=None,
+                   help="comma-separated subset to run "
+                        "(capability,blockmap,lint,sanitize); default all")
+    p.add_argument("--list", action="store_true",
+                   help="list passes and exit")
+    p.add_argument("--emit-matrix", action="store_true",
+                   help="print the registry-derived capability matrix "
+                        "markdown (paste into src/repro/kernels/"
+                        "README.md) and exit")
+    p.add_argument("--readme", default=None, metavar="PATH",
+                   help="capability pass: check this README instead of "
+                        "src/repro/kernels/README.md")
+    p.add_argument("--pin-blocks", default=None, metavar="BM,BN,BK",
+                   help="blockmap pass: force these block shapes over "
+                        "the sweep instead of select_block_shapes "
+                        "(violation injection)")
+    p.add_argument("--inject-sanitize", default=None,
+                   choices=("transfer", "retrace"),
+                   help="sanitize pass: seed an extra device->host "
+                        "transfer or a post-warmup retrace "
+                        "(violation injection)")
+    p.add_argument("--lint-paths", default=None, metavar="P1,P2",
+                   help="lint pass: scan these paths instead of the "
+                        "rules.toml [lint] paths")
+    p.add_argument("--rules", default=None, metavar="PATH",
+                   help="lint pass: alternate rules.toml")
+    args = p.parse_args(argv)
+
+    if args.list:
+        for name, _ in PASSES:
+            print(name)
+        return 0
+    if args.emit_matrix:
+        print(capability.render_capability_matrix(), end="")
+        return 0
+
+    selected = ([s.strip() for s in args.passes.split(",") if s.strip()]
+                if args.passes else [name for name, _ in PASSES])
+    known = {name for name, _ in PASSES}
+    unknown = [s for s in selected if s not in known]
+    if unknown:
+        p.error(f"unknown pass(es) {unknown}; choose from {sorted(known)}")
+
+    pin_blocks = None
+    if args.pin_blocks:
+        try:
+            pin_blocks = tuple(int(v) for v in args.pin_blocks.split(","))
+            if len(pin_blocks) != 3:
+                raise ValueError
+        except ValueError:
+            p.error("--pin-blocks wants three ints: BM,BN,BK")
+
+    runners = {
+        "capability": lambda: capability.run(readme_path=args.readme),
+        "blockmap": lambda: blockmap.run(pin_blocks=pin_blocks),
+        "lint": lambda: lint.run(
+            paths=([s.strip() for s in args.lint_paths.split(",")]
+                   if args.lint_paths else None),
+            config=args.rules),
+        "sanitize": lambda: sanitizer.run(
+            inject=(args.inject_sanitize,) if args.inject_sanitize
+            else ()),
+    }
+
+    findings = []
+    for name, _ in PASSES:          # canonical order, subset-filtered
+        if name not in selected:
+            continue
+        got = runners[name]()
+        print(f"[{name}] {len(got)} finding(s)")
+        findings.extend(got)
+    for f in findings:
+        print(f" {f}")
+    if findings:
+        print(f"FAIL: {len(findings)} finding(s)")
+    else:
+        print("OK: all passes clean")
+    return min(len(findings), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Shared types for the static-analysis passes (`repro.analysis`).
+
+Every pass returns a flat list of :class:`Finding` records; the CLI
+(`python -m repro.analysis`) prints them and exits nonzero when any
+pass found anything.  A finding identifies the pass that produced it,
+a stable rule/check id (documented in src/repro/analysis/README.md),
+and where it points (a ``file:line`` or a lattice-cell string).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+# src/repro/analysis/ -> repo root (the PYTHONPATH=src layout every
+# entry point in this repo uses)
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation surfaced by an analysis pass."""
+    passname: str          # capability | blockmap | sanitize | lint
+    rule: str              # stable check id (README.md rule catalog)
+    where: str             # file:line, lattice cell, or invariant site
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.passname}:{self.rule}] {self.where}: {self.message}"
+
+
+def rel(path: str) -> str:
+    """Repo-relative form of a path (stable finding locations)."""
+    try:
+        return os.path.relpath(path, REPO_ROOT)
+    except ValueError:               # different drive (windows)
+        return path

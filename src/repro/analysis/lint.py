@@ -1,0 +1,416 @@
+"""Pass 4 — AST lint encoding the repo's standing constraints.
+
+Rules (catalog + rationale in src/repro/analysis/README.md):
+
+  RA000  malformed suppression comment or invalid rules.toml entry
+  RA001  bare/blind exception swallow: ``except:`` /
+         ``except Exception:`` where the exception is not bound (or
+         bound but never used) and not re-raised — failures must be
+         surfaced, not passed over
+  RA002  ``jax.device_get`` outside an audited ``_device_get``
+         chokepoint — every device->host sync must route through the
+         engines' counted chokepoint (the transfer contract pass 3
+         enforces dynamically)
+  RA003  routing kwargs (backend/domain/interpret/bm/bn/bk) threaded
+         into ``ternary_matmul``/``ternary_matmul_int8``/``cim_matmul``
+         calls outside ``src/repro/kernels/`` — routing belongs in the
+         plan API (``plan_matmul``/``CimConfig``), not call sites; the
+         kernels package itself (shims + runners) is the one layer
+         allowed to speak kwargs
+  RA004  unseeded RNG in ``benchmarks/`` — legacy ``np.random.*``
+         global-state sampling, stdlib ``random.*`` module calls, or
+         ``default_rng()`` with no seed make benchmark numbers
+         irreproducible
+
+Suppressions:
+
+  * inline, same line as the violation::
+
+        risky()   # lint: allow RA002 (one-line reason)
+
+    A ``# lint:`` comment that does not parse to exactly that shape is
+    itself a finding (RA000) — suppressions never fail open.
+  * config, in ``src/repro/analysis/rules.toml``::
+
+        [[suppress]]
+        rule = "RA002"
+        path = "src/repro/checkpoint/checkpoint.py"
+        reason = "one-line reason"
+
+    Wildcard rules and empty reasons are rejected (RA000).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from typing import Optional
+
+from .base import REPO_ROOT, Finding, rel
+
+PASS = "lint"
+
+DEFAULT_PATHS = ("src", "benchmarks")
+CONFIG_PATH = os.path.join(os.path.dirname(__file__), "rules.toml")
+
+# RA003: the plan-request fields that must not be threaded as call-site
+# kwargs around the plan API (kernels' deprecation shims map them into
+# plan_matmul; everything else goes through ExecutionPlan/CimConfig)
+ROUTING_KWARGS = frozenset(
+    {"backend", "domain", "interpret", "bm", "bn", "bk"})
+ROUTED_CALLEES = frozenset(
+    {"ternary_matmul", "ternary_matmul_int8", "cim_matmul"})
+# the one layer allowed to speak routing kwargs: the shims that accept
+# them and the runners that forward them into pallas kernels
+RA003_EXEMPT_PREFIX = os.path.join("src", "repro", "kernels") + os.sep
+
+# RA004: legacy numpy global-RNG sampling + stdlib random module fns
+NP_LEGACY_SAMPLERS = frozenset(
+    {"rand", "randn", "randint", "random", "random_sample", "choice",
+     "shuffle", "permutation", "uniform", "normal", "standard_normal"})
+STDLIB_RANDOM_FNS = frozenset(
+    {"random", "randint", "randrange", "choice", "choices", "shuffle",
+     "sample", "uniform", "gauss", "normalvariate", "betavariate"})
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*allow\s+(RA\d{3})\s+\(([^)]+)\)")
+_SUPPRESS_MARKER_RE = re.compile(r"#\s*lint\s*:")
+_RULE_ID_RE = re.compile(r"^RA\d{3}$")
+
+
+# ------------------------------------------------ rules.toml (3.10
+# has no tomllib; this parses the strict subset the config uses:
+# [section], [[table]], key = "string" / ["a", "b"] — anything else is
+# a config error, surfaced as RA000)
+
+def _parse_toml_value(text: str, where: str, findings: list):
+    text = text.strip()
+    if text.startswith('"') and text.endswith('"') and len(text) >= 2:
+        return text[1:-1]
+    if text.startswith("[") and text.endswith("]"):
+        inner = text[1:-1].strip()
+        if not inner:
+            return []
+        items = []
+        for part in inner.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if not (part.startswith('"') and part.endswith('"')):
+                findings.append(Finding(
+                    PASS, "RA000", where,
+                    f"unsupported TOML value {part!r} (quoted strings "
+                    f"only)"))
+                return None
+            items.append(part[1:-1])
+        return items
+    findings.append(Finding(
+        PASS, "RA000", where,
+        f"unsupported TOML value {text!r} (quoted string or list of "
+        f"quoted strings)"))
+    return None
+
+
+def _parse_toml(text: str, path: str, findings: list) -> dict:
+    data: dict = {}
+    current: Optional[dict] = None
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        where = f"{path}:{lineno}"
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            current = {}
+            data.setdefault(line[2:-2].strip(), []).append(current)
+        elif line.startswith("[") and line.endswith("]"):
+            current = data.setdefault(line[1:-1].strip(), {})
+        elif "=" in line:
+            if current is None:
+                findings.append(Finding(
+                    PASS, "RA000", where,
+                    "top-level keys are not supported; use a [section]"))
+                continue
+            key, _, value = line.partition("=")
+            parsed = _parse_toml_value(value, where, findings)
+            if parsed is not None:
+                current[key.strip()] = parsed
+        else:
+            findings.append(Finding(
+                PASS, "RA000", where, f"unparseable line {line!r}"))
+    return data
+
+
+def load_config(path: str, findings: list) -> dict:
+    """Parse + validate rules.toml; config errors become RA000
+    findings.  Returns {'paths': [...], 'suppress': [(rule, path), ...]}."""
+    cfg = {"paths": list(DEFAULT_PATHS), "suppress": []}
+    if not os.path.exists(path):
+        return cfg
+    with open(path, encoding="utf-8") as f:
+        data = _parse_toml(f.read(), rel(path), findings)
+    lint = data.get("lint", {})
+    if isinstance(lint.get("paths"), list) and lint["paths"]:
+        cfg["paths"] = lint["paths"]
+    for i, sup in enumerate(data.get("suppress", [])):
+        where = f"{rel(path)}:[[suppress]] #{i + 1}"
+        rule = sup.get("rule", "")
+        spath = sup.get("path", "")
+        reason = sup.get("reason", "")
+        if not _RULE_ID_RE.match(rule):
+            findings.append(Finding(
+                PASS, "RA000", where,
+                f"suppression rule must be a single RAxxx id, got "
+                f"{rule!r} (wildcards are not allowed)"))
+            continue
+        if not spath:
+            findings.append(Finding(
+                PASS, "RA000", where, "suppression needs a path"))
+            continue
+        if not reason.strip():
+            findings.append(Finding(
+                PASS, "RA000", where,
+                "suppression needs a one-line reason"))
+            continue
+        cfg["suppress"].append((rule, spath))
+    return cfg
+
+
+# ------------------------------------------------ per-file checks
+
+def _collect_inline_suppressions(source: str, path: str,
+                                 findings: list) -> dict:
+    """line -> set of rule ids allowed on that line; malformed
+    ``# lint:`` comments are RA000.  Only real COMMENT tokens are
+    inspected (tokenize), so '# lint:' inside string literals — e.g.
+    this module's own docstrings — is not a suppression attempt."""
+    allowed: dict = {}
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return allowed      # unparseable files are flagged by ast below
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        if not _SUPPRESS_MARKER_RE.search(tok.string):
+            continue
+        lineno = tok.start[0]
+        matches = _SUPPRESS_RE.findall(tok.string)
+        if not matches:
+            findings.append(Finding(
+                PASS, "RA000", f"{path}:{lineno}",
+                "malformed suppression; the form is "
+                "'# lint: allow RAxxx (reason)'"))
+            continue
+        for rule, reason in matches:
+            if not reason.strip():
+                findings.append(Finding(
+                    PASS, "RA000", f"{path}:{lineno}",
+                    "suppression needs a non-empty reason"))
+                continue
+            allowed.setdefault(lineno, set()).add(rule)
+    return allowed
+
+
+def _names_in(nodes) -> set:
+    out = set()
+    for node in nodes:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name):
+                out.add(sub.id)
+    return out
+
+
+def _has_bare_raise(nodes) -> bool:
+    for node in nodes:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Raise) and sub.exc is None:
+                return True
+    return False
+
+
+def _is_blind_handler_type(node) -> bool:
+    if node is None:                       # bare except:
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in ("Exception", "BaseException")
+    if isinstance(node, ast.Tuple):
+        return any(_is_blind_handler_type(e) for e in node.elts)
+    return False
+
+
+def _dotted(node) -> str:
+    """'a.b.c' for nested Attribute/Name chains, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, in_benchmarks: bool,
+                 ra003_exempt: bool):
+        self.path = path
+        self.in_benchmarks = in_benchmarks
+        self.ra003_exempt = ra003_exempt
+        self.func_stack: list = []
+        self.findings: list = []
+
+    def _flag(self, rule: str, node, message: str) -> None:
+        self.findings.append(Finding(
+            PASS, rule, f"{self.path}:{node.lineno}", message))
+
+    # --- RA001 ------------------------------------------------
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if _is_blind_handler_type(node.type):
+            if _has_bare_raise(node.body):
+                pass                       # re-raised: not a swallow
+            elif node.name is None:
+                # neither binds nor re-raises — nothing about the
+                # failure can reach a log or a caller
+                kind = ("bare except:" if node.type is None
+                        else f"except {ast.unparse(node.type)}:")
+                self._flag("RA001", node,
+                           f"{kind} swallows the exception without "
+                           f"binding or re-raising it; narrow the type "
+                           f"and surface the failure")
+            elif node.name not in _names_in(node.body):
+                self._flag("RA001", node,
+                           f"except {ast.unparse(node.type)} as "
+                           f"{node.name}: binds the exception but never "
+                           f"uses it; narrow the type and surface the "
+                           f"failure")
+        self.generic_visit(node)
+
+    # --- RA002 ------------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if (_dotted(node) == "jax.device_get"
+                and "_device_get" not in self.func_stack):
+            self._flag("RA002", node,
+                       "jax.device_get outside an audited _device_get "
+                       "chokepoint; route device->host syncs through "
+                       "the engine's counted chokepoint")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "jax" and any(a.name == "device_get"
+                                        for a in node.names):
+            self._flag("RA002", node,
+                       "importing device_get from jax bypasses the "
+                       "audited _device_get chokepoint")
+        self.generic_visit(node)
+
+    # --- RA003 / RA004 ----------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = _dotted(node.func)
+        leaf = callee.rsplit(".", 1)[-1] if callee else ""
+        if not self.ra003_exempt and leaf in ROUTED_CALLEES:
+            threaded = sorted(k.arg for k in node.keywords
+                              if k.arg in ROUTING_KWARGS)
+            if threaded:
+                self._flag("RA003", node,
+                           f"{leaf}() threads routing kwargs "
+                           f"{threaded} around the plan API; build an "
+                           f"ExecutionPlan (plan_matmul) or CimConfig "
+                           f"instead")
+        if self.in_benchmarks:
+            self._check_rng(node, callee, leaf)
+        self.generic_visit(node)
+
+    def _check_rng(self, node: ast.Call, callee: str, leaf: str) -> None:
+        parts = callee.split(".")
+        if (len(parts) == 3 and parts[0] in ("np", "numpy")
+                and parts[1] == "random"
+                and parts[2] in NP_LEGACY_SAMPLERS):
+            self._flag("RA004", node,
+                       f"{callee}() samples from numpy's global RNG; "
+                       f"benchmarks must use a seeded Generator "
+                       f"(np.random.default_rng(seed))")
+        elif (len(parts) == 2 and parts[0] == "random"
+                and parts[1] in STDLIB_RANDOM_FNS):
+            self._flag("RA004", node,
+                       f"{callee}() uses the stdlib global RNG; "
+                       f"benchmarks must use a seeded Generator")
+        elif leaf == "default_rng" and not node.args and not node.keywords:
+            self._flag("RA004", node,
+                       "default_rng() without a seed is entropy-seeded; "
+                       "benchmarks must pass an explicit seed")
+
+    # --- function-stack tracking for RA002 --------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+
+def check_file(path: str, rel_path: Optional[str] = None) -> list:
+    """Lint one python file; returns findings with inline suppressions
+    already applied (RA000s for malformed suppressions included)."""
+    rel_path = rel_path if rel_path is not None else rel(path)
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    findings: list = []
+    allowed = _collect_inline_suppressions(source, rel_path, findings)
+    try:
+        tree = ast.parse(source, filename=rel_path)
+    except SyntaxError as e:
+        findings.append(Finding(
+            PASS, "RA000", f"{rel_path}:{e.lineno}",
+            f"file does not parse: {e.msg}"))
+        return findings
+    in_benchmarks = rel_path.startswith("benchmarks" + os.sep)
+    ra003_exempt = rel_path.startswith(RA003_EXEMPT_PREFIX)
+    visitor = _Visitor(rel_path, in_benchmarks, ra003_exempt)
+    visitor.visit(tree)
+    for f in visitor.findings:
+        lineno = int(f.where.rsplit(":", 1)[1])
+        if f.rule in allowed.get(lineno, ()):
+            continue
+        findings.append(f)
+    return findings
+
+
+def _iter_py_files(paths):
+    for base in paths:
+        root = os.path.join(REPO_ROOT, base)
+        if os.path.isfile(root):
+            yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if d != "__pycache__"
+                           and not d.startswith(".")]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    yield os.path.join(dirpath, name)
+
+
+def run(paths=None, config: Optional[str] = None) -> list:
+    """The lint pass over the configured trees (default: rules.toml's
+    ``[lint] paths``, falling back to src/ + benchmarks/)."""
+    findings: list = []
+    cfg = load_config(config if config is not None else CONFIG_PATH,
+                      findings)
+    scan = list(paths) if paths is not None else cfg["paths"]
+    suppress = cfg["suppress"]
+    for path in _iter_py_files(scan):
+        rel_path = rel(path)
+        for f in check_file(path, rel_path):
+            if any(rule == f.rule
+                   and (rel_path == spath
+                        or rel_path.startswith(spath.rstrip("/") + "/"))
+                   for rule, spath in suppress):
+                continue
+            findings.append(f)
+    return findings

@@ -21,7 +21,6 @@ import json
 import subprocess
 import sys
 import time
-import traceback
 
 import jax
 import jax.numpy as jnp
@@ -351,18 +350,17 @@ def main(argv=None):
 
     if not args.arch or not args.shape:
         p.error("--arch and --shape required (or --all)")
-    try:
-        res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
-                       packed=args.packed, microbatches=args.microbatches,
-                       fsdp=not args.no_fsdp, remat=args.remat,
-                       opt_name=args.opt, ep=args.ep, sp=args.sp,
-                       pure_dp=args.pure_dp, kv_cache=args.kv_cache,
-                       decode_loop=args.decode_loop,
-                       continuous=args.continuous, kv_layout=args.kv,
-                       page_size=args.page_size)
-    except Exception:
-        traceback.print_exc()
-        sys.exit(1)
+    # no blanket except here: a failing cell should crash with its real
+    # traceback and the interpreter's nonzero exit, not a laundered
+    # sys.exit(1) that hides the exception type from callers
+    res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   packed=args.packed, microbatches=args.microbatches,
+                   fsdp=not args.no_fsdp, remat=args.remat,
+                   opt_name=args.opt, ep=args.ep, sp=args.sp,
+                   pure_dp=args.pure_dp, kv_cache=args.kv_cache,
+                   decode_loop=args.decode_loop,
+                   continuous=args.continuous, kv_layout=args.kv,
+                   page_size=args.page_size)
     if args.tag:
         res["tag"] = args.tag
         os.makedirs(args.out_dir, exist_ok=True)

@@ -177,15 +177,22 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
     useful = mf / (flops * chips) if flops else 0.0
     peak_frac = t_comp / max(max(terms.values()), 1e-30)
 
-    ms = None
+    # memory_analysis is optional in the compiled-executable protocol
+    # (some backends return None or raise Unimplemented); record WHY it
+    # is missing instead of silently dropping the section.  jax is
+    # imported here, not module-level: this module is otherwise static
+    # math, and `compiled` existing means jax is already loaded.
+    import jax
     try:
         m = compiled.memory_analysis()
         ms = {"argument_bytes": m.argument_size_in_bytes,
               "output_bytes": m.output_size_in_bytes,
               "temp_bytes": m.temp_size_in_bytes,
-              "alias_bytes": m.alias_size_in_bytes}
-    except Exception:
-        pass
+              "alias_bytes": m.alias_size_in_bytes} if m is not None \
+            else {"unavailable": "memory_analysis() returned None"}
+    except (NotImplementedError, AttributeError,
+            jax.errors.JaxRuntimeError) as e:
+        ms = {"unavailable": repr(e)}
 
     return RooflineReport(
         arch=arch, shape=shape, mesh=mesh_name, chips=chips,

@@ -19,7 +19,7 @@ from repro.core.ternary import ternarize
 from repro.core.yield_model import sl_restore_yield, tl_restore_yield
 from repro.data import ClassTaskConfig, class_batch
 
-from .common import eval_mlp, mlp_logits, save_json, train_mlp
+from .common import eval_mlp, mlp_logits, save_json, stable_seed, train_mlp
 
 NS = (6, 18, 30, 60)
 
@@ -57,20 +57,25 @@ def run(verbose=True, num_mc=4096) -> dict:
     task = ClassTaskConfig(num_classes=10, dim=128, snr=2.5, seed=0)
     params = train_mlp(task)
     base_acc = eval_mlp(params, task)
-    key = jax.random.key(3)
+    # configuration-derived Monte-Carlo keys (stable_seed), replacing
+    # the old ad-hoc offsets (100+n, 999+n)
+    key = jax.random.key(stable_seed("accuracy_yield", 3))
 
     results = {"tl": {}, "sl": {}}
     for n in NS:
-        ytl = tl_restore_trials = tl_restore_yield(
-            jax.random.fold_in(key, n), n, 4, num_mc)["per_state"]
-        ysl_w = sl_restore_yield(jax.random.fold_in(key, 100 + n), n,
-                                 num_mc)["per_state"]
+        ytl = tl_restore_yield(
+            jax.random.fold_in(key, stable_seed("tl-yield", n, num_mc)),
+            n, 4, num_mc)["per_state"]
+        ysl_w = sl_restore_yield(
+            jax.random.fold_in(key, stable_seed("sl-yield", n, num_mc)),
+            n, num_mc)["per_state"]
         # SL stores binary bits; map its HRS/LRS yields onto the trit
         # confusion (state 0 unaffected by construction -> use mean)
         ysl = jnp.array([ysl_w[0], (ysl_w[0] + ysl_w[1]) / 2, ysl_w[1]])
         for scheme, y in (("tl", ytl), ("sl", ysl)):
-            noisy = _quantize_with_errors(params, y,
-                                          jax.random.fold_in(key, 999 + n))
+            noisy = _quantize_with_errors(
+                params, y,
+                jax.random.fold_in(key, stable_seed("inject", scheme, n)))
             acc0 = eval_mlp(noisy, task)
             acc1 = eval_mlp(_retrain(noisy, task), task)
             results[scheme][n] = {"pre_retrain": acc0, "post_retrain": acc1}

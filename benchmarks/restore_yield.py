@@ -12,19 +12,25 @@ import jax
 from repro.core.yield_model import (cluster_sweep, sl_restore_yield,
                                     tl_restore_yield, yield_sweep)
 
-from .common import save_json
+from .common import save_json, stable_seed
 
 NS = (6, 12, 18, 30, 45, 60)
 
 
 def run(verbose=True, num_mc=8192) -> dict:
-    key = jax.random.key(42)
-    tl = {n: tl_restore_yield(jax.random.fold_in(key, n), n, 4, num_mc)
-          for n in NS}
-    sl = {n: sl_restore_yield(jax.random.fold_in(key, 100 + n), n, num_mc)
-          for n in NS}
-    ms = cluster_sweep(jax.random.fold_in(key, 7), ms=(1, 2, 3, 4), n=60,
-                       num_mc=num_mc)
+    # every Monte-Carlo key derives from the point configuration via
+    # stable_seed — no ad-hoc integer offsets (100+n style), so adding
+    # a sweep point never reshuffles the draws of the others
+    key = jax.random.key(stable_seed("restore_yield", 42))
+    tl = {n: tl_restore_yield(
+        jax.random.fold_in(key, stable_seed("tl", n, 4, num_mc)),
+        n, 4, num_mc) for n in NS}
+    sl = {n: sl_restore_yield(
+        jax.random.fold_in(key, stable_seed("sl", n, num_mc)),
+        n, num_mc) for n in NS}
+    ms = cluster_sweep(
+        jax.random.fold_in(key, stable_seed("cluster", 60, num_mc)),
+        ms=(1, 2, 3, 4), n=60, num_mc=num_mc)
     out = {
         "tl_yield_vs_n": {n: v["weighted"] for n, v in tl.items()},
         "tl_min_state_vs_n": {n: v["min_state"] for n, v in tl.items()},

@@ -10,11 +10,18 @@ from __future__ import annotations
 import json
 import os
 
+# device-fidelity accuracy bound: the smoke classifier served through
+# the fault-injected analog path at the MEASURED TL restore yield may
+# lose at most this much accuracy vs the exact ternary kernels (the
+# acceptance bound serve_fidelity's claim is judged against — pinned
+# HERE so a bench edit cannot quietly relax it)
+FIDELITY_ACC_DROP_MAX = 0.05
+
 # artifact name -> required top-level keys
 TOP_LEVEL = {
     "wallclock": {
         "backend", "platform", "shapes", "serve", "serve_continuous",
-        "serve_paged",
+        "serve_paged", "serve_fidelity",
         "min_decode_flop_waste_reduction",
         "claim_waste_reduction_ge_8x",
         "claim_device_loop_single_transfer",
@@ -26,6 +33,10 @@ TOP_LEVEL = {
         "claim_paged_tokens_identical",
         "claim_paged_kv_bytes_2x",
         "claim_paged_prefix_hits",
+        "claim_fidelity_accuracy_within_bound",
+        "claim_fidelity_degrades_without_scrub",
+        "claim_fidelity_scrub_repairs",
+        "claim_fidelity_transfer_accounting",
     },
     "kernel_bench": {
         "sweep", "max_rel_err", "all_match_oracle",
@@ -43,8 +54,9 @@ WALLCLOCK_CELL = {
 }
 
 # each cell's resolved-plan record (kernels.ExecutionPlan.describe):
-# which backend/domain/blocks actually produced the step timings
-WALLCLOCK_PLAN = {"backend", "domain", "packing", "blocks"}
+# which backend/domain/blocks — and, since the device backend landed,
+# which FIDELITY — actually produced the step timings
+WALLCLOCK_PLAN = {"backend", "domain", "packing", "blocks", "fidelity"}
 
 # wallclock serve_continuous section: the continuous-vs-bucket artifact
 # contract (ROADMAP §Performance)
@@ -71,6 +83,24 @@ SERVE_PAGED = {
     "claim_paged_tokens_identical",
     "claim_paged_kv_bytes_2x",
     "claim_paged_prefix_hits",
+}
+
+# wallclock serve_fidelity section: device-fidelity serving at the
+# measured TL restore yield — accuracy vs the schema-pinned bound,
+# scrub-gate error rates (repair must be measured, not a no-op),
+# throughput, ADC clip counters, and the scrub restore-energy cost
+SERVE_FIDELITY = {
+    "fault_model", "plan_exact", "plan_device",
+    "acc_float", "acc_exact", "acc_device", "acc_drop", "acc_drop_max",
+    "tok_per_s_exact", "tok_per_s_device", "token_agreement",
+    "err_with_scrub", "err_no_scrub", "scrub_residual_bound",
+    "scrubs_run", "adc_clip_lo", "adc_clip_hi",
+    "host_transfers_device", "chunks_device",
+    "scrub_energy_j", "scrub_energy_j_per_token",
+    "claim_fidelity_accuracy_within_bound",
+    "claim_fidelity_degrades_without_scrub",
+    "claim_fidelity_scrub_repairs",
+    "claim_fidelity_transfer_accounting",
 }
 
 
@@ -135,6 +165,34 @@ def validate(name: str, payload: dict) -> list[str]:
                               f"{sorted(miss)}")
         elif "serve_paged" in payload:
             errors.append("wallclock serve_paged: not an object")
+        sf = payload.get("serve_fidelity")
+        if isinstance(sf, dict):
+            miss = SERVE_FIDELITY - sf.keys()
+            if miss:
+                errors.append(f"wallclock serve_fidelity: missing "
+                              f"{sorted(miss)}")
+            for pk in ("plan_exact", "plan_device"):
+                rec = sf.get(pk)
+                if not isinstance(rec, dict):
+                    continue               # absence reported above
+                pmiss = WALLCLOCK_PLAN - rec.keys()
+                if pmiss:
+                    errors.append(f"wallclock serve_fidelity.{pk}: "
+                                  f"missing {sorted(pmiss)}")
+            if isinstance(sf.get("plan_device"), dict) and \
+                    sf["plan_device"].get("fidelity") != "device":
+                errors.append("wallclock serve_fidelity.plan_device: "
+                              "fidelity is not 'device'")
+            # the bound is pinned here, not in the bench: an artifact
+            # claiming the accuracy gate against a looser bound fails
+            if "acc_drop_max" in sf and \
+                    sf["acc_drop_max"] != FIDELITY_ACC_DROP_MAX:
+                errors.append(
+                    f"wallclock serve_fidelity: acc_drop_max "
+                    f"{sf['acc_drop_max']} != schema-pinned "
+                    f"{FIDELITY_ACC_DROP_MAX}")
+        elif "serve_fidelity" in payload:
+            errors.append("wallclock serve_fidelity: not an object")
     return errors
 
 

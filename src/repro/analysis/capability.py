@@ -1,8 +1,8 @@
 """Pass 1 — capability-lattice checker.
 
 Enumerates the full (op x backend x domain x packing x kv_layout x
-platform) lattice from the LIVE backend registry in ``repro.kernels``
-and proves, cell by cell:
+fidelity x platform) lattice from the LIVE backend registry in
+``repro.kernels`` and proves, cell by cell:
 
   * every declared-capable cell resolves through the public
     ``plan_matmul`` path (current platform) or the internal cached
@@ -43,8 +43,9 @@ README_PATH = os.path.join(REPO_ROOT, "src", "repro", "kernels",
 # never executes), it only has to satisfy packing divisibility
 EVAL_SHAPE = (8, 64, 128)
 
-# the five machine-checked matrix columns, in table order
-MATRIX_COLUMNS = ("ops", "domains", "packings", "platforms", "kv layouts")
+# the six machine-checked matrix columns, in table order
+MATRIX_COLUMNS = ("ops", "domains", "packings", "platforms", "kv layouts",
+                  "fidelities")
 
 
 def _registry():
@@ -54,10 +55,11 @@ def _registry():
 
 
 def _lattice_axes(registry):
-    from repro.kernels.plan import DOMAINS, KV_LAYOUTS, OPS, PACKINGS
+    from repro.kernels.plan import (DOMAINS, FIDELITIES, KV_LAYOUTS, OPS,
+                                    PACKINGS)
     platforms = sorted(set().union(*(s.platforms
                                      for s in registry.values())))
-    return OPS, DOMAINS, PACKINGS, KV_LAYOUTS, platforms
+    return OPS, DOMAINS, PACKINGS, KV_LAYOUTS, FIDELITIES, platforms
 
 
 def _eval_operands(op: str, packing: str, shape):
@@ -77,27 +79,28 @@ def _eval_operands(op: str, packing: str, shape):
     return x, w
 
 
-def _check_declared_cell(name, op, domain, packing, kv_layout, platform,
-                         current_platform) -> Optional[Finding]:
+def _check_declared_cell(name, op, domain, packing, kv_layout, fidelity,
+                         platform, current_platform) -> Optional[Finding]:
     """A declared-capable cell must resolve and abstract-eval."""
     import jax
     from repro.kernels import execute, plan_matmul
     from repro.kernels.plan import _resolve
     cell = (f"op={op} backend={name} domain={domain} packing={packing} "
-            f"kv_layout={kv_layout} platform={platform}")
+            f"kv_layout={kv_layout} fidelity={fidelity} "
+            f"platform={platform}")
     m, k, n = EVAL_SHAPE
+    adc = 5 if (op == "cim" or fidelity == "device") else None
     try:
         if platform == current_platform:
             plan = plan_matmul(EVAL_SHAPE, op=op, backend=name,
                                domain=domain, packing=packing,
-                               kv_layout=kv_layout)
+                               kv_layout=kv_layout, fidelity=fidelity)
         else:
             # the public entry probes the live platform; cross-platform
             # cells go through the same cached resolver explicitly
             plan = _resolve(op, m, k, n, "auto", name, domain, packing,
-                            None, None, None, None, kv_layout,
-                            5 if op == "cim" else None,
-                            5 if op == "cim" else None, platform)
+                            None, None, None, None, kv_layout, fidelity,
+                            adc, adc, platform)
     except Exception as e:
         return Finding(PASS, "CAP001", cell,
                        f"declared-capable cell failed to resolve: {e!r}")
@@ -122,14 +125,16 @@ def _check_declared_cell(name, op, domain, packing, kv_layout, platform,
     return None
 
 
-def _check_undeclared_cell(name, op, domain, packing, kv_layout,
+def _check_undeclared_cell(name, op, domain, packing, kv_layout, fidelity,
                            platform) -> Optional[Finding]:
     """An undeclared cell must raise the loud capability error."""
     from repro.kernels.plan import resolve_backend
     cell = (f"op={op} backend={name} domain={domain} packing={packing} "
-            f"kv_layout={kv_layout} platform={platform}")
+            f"kv_layout={kv_layout} fidelity={fidelity} "
+            f"platform={platform}")
     try:
-        resolve_backend(op, name, domain, packing, platform, kv_layout)
+        resolve_backend(op, name, domain, packing, platform, kv_layout,
+                        fidelity)
     except ValueError as e:
         if "does not support" not in str(e):
             return Finding(PASS, "CAP003", cell,
@@ -140,18 +145,20 @@ def _check_undeclared_cell(name, op, domain, packing, kv_layout,
                    "undeclared cell resolved without a capability error")
 
 
-def _check_auto_cell(registry, op, domain, packing, kv_layout,
+def _check_auto_cell(registry, op, domain, packing, kv_layout, fidelity,
                      platform) -> Optional[Finding]:
     """'auto' must pick the highest-priority capable backend, or raise
     the no-capable-backend error when the cell is empty."""
     from repro.kernels.plan import resolve_backend
     cell = (f"op={op} backend=auto domain={domain} packing={packing} "
-            f"kv_layout={kv_layout} platform={platform}")
+            f"kv_layout={kv_layout} fidelity={fidelity} "
+            f"platform={platform}")
     capable = [s for s in registry.values()
-               if s.supports(op, domain, packing, platform, kv_layout)]
+               if s.supports(op, domain, packing, platform, kv_layout,
+                             fidelity)]
     try:
         spec = resolve_backend(op, "auto", domain, packing, platform,
-                               kv_layout)
+                               kv_layout, fidelity)
     except ValueError as e:
         if capable:
             return Finding(PASS, "CAP004", cell,
@@ -206,13 +213,14 @@ def render_capability_matrix(notes: Optional[dict] = None) -> str:
     notes = notes or {}
     registry = _registry()
     head = ("| backend | ops | domains | packings | platforms "
-            "| kv layouts | notes |")
-    sep = "|---------|-----|---------|----------|-----------|------------|-------|"
+            "| kv layouts | fidelities | notes |")
+    sep = ("|---------|-----|---------|----------|-----------"
+           "|------------|------------|-------|")
     rows = [head, sep]
     for spec in sorted(registry.values(), key=lambda s: -s.priority):
         cells = [f"`{spec.name}`"]
         for vals in (spec.ops, spec.domains, spec.packings,
-                     spec.platforms, spec.kv_layouts):
+                     spec.platforms, spec.kv_layouts, spec.fidelities):
             cells.append(", ".join(sorted(vals)))
         cells.append(notes.get(spec.name, ""))
         rows.append("| " + " | ".join(cells) + " |")
@@ -289,7 +297,8 @@ def _check_readme_matrix(registry, readme_path: str) -> list:
                                 f"matrix documents unregistered backend "
                                 f"{name!r}"))
     attr = {"ops": "ops", "domains": "domains", "packings": "packings",
-            "platforms": "platforms", "kv layouts": "kv_layouts"}
+            "platforms": "platforms", "kv layouts": "kv_layouts",
+            "fidelities": "fidelities"}
     for name in sorted(documented & live):
         spec = registry[name]
         for col, field in attr.items():
@@ -313,7 +322,8 @@ def run(readme_path: Optional[str] = None,
     tests; the defaults are the live registry and the tracked README.
     """
     registry = registry if registry is not None else _registry()
-    ops, domains, packings, kv_layouts, platforms = _lattice_axes(registry)
+    (ops, domains, packings, kv_layouts, fidelities,
+     platforms) = _lattice_axes(registry)
     import jax
     current = jax.default_backend()
     findings = []
@@ -322,24 +332,28 @@ def run(readme_path: Optional[str] = None,
         for domain in domains:
             for packing in packings:
                 for kv_layout in kv_layouts:
-                    for platform in platforms:
-                        for name, spec in sorted(registry.items()):
-                            cells += 1
-                            if spec.supports(op, domain, packing,
-                                             platform, kv_layout):
-                                f = _check_declared_cell(
-                                    name, op, domain, packing, kv_layout,
-                                    platform, current)
-                            else:
-                                f = _check_undeclared_cell(
-                                    name, op, domain, packing, kv_layout,
-                                    platform)
+                    for fidelity in fidelities:
+                        for platform in platforms:
+                            for name, spec in sorted(registry.items()):
+                                cells += 1
+                                if spec.supports(op, domain, packing,
+                                                 platform, kv_layout,
+                                                 fidelity):
+                                    f = _check_declared_cell(
+                                        name, op, domain, packing,
+                                        kv_layout, fidelity, platform,
+                                        current)
+                                else:
+                                    f = _check_undeclared_cell(
+                                        name, op, domain, packing,
+                                        kv_layout, fidelity, platform)
+                                if f:
+                                    findings.append(f)
+                            f = _check_auto_cell(registry, op, domain,
+                                                 packing, kv_layout,
+                                                 fidelity, platform)
                             if f:
                                 findings.append(f)
-                        f = _check_auto_cell(registry, op, domain,
-                                             packing, kv_layout, platform)
-                        if f:
-                            findings.append(f)
     findings.extend(_check_cim_packed_trit2_rejection())
     findings.extend(_check_readme_matrix(
         registry, readme_path or README_PATH))

@@ -18,9 +18,11 @@ Rules (catalog + rationale in src/repro/analysis/README.md):
          kernels package itself (shims + runners) is the one layer
          allowed to speak kwargs
   RA004  unseeded RNG in ``benchmarks/`` — legacy ``np.random.*``
-         global-state sampling, stdlib ``random.*`` module calls, or
-         ``default_rng()`` with no seed make benchmark numbers
-         irreproducible
+         global-state sampling, stdlib ``random.*`` module calls,
+         ``default_rng()`` with no seed, or ``jax.random.key``/
+         ``PRNGKey`` construction whose seed is neither an int literal
+         nor a ``stable_seed(...)`` derivation — all make benchmark
+         numbers irreproducible (or reshuffle when a sweep is edited)
 
 Suppressions:
 
@@ -341,6 +343,20 @@ class _Visitor(ast.NodeVisitor):
             self._flag("RA004", node,
                        "default_rng() without a seed is entropy-seeded; "
                        "benchmarks must pass an explicit seed")
+        elif (len(parts) >= 2 and parts[-2] == "random"
+                and parts[-1] in ("key", "PRNGKey")):
+            seed = node.args[0] if node.args else None
+            literal = (isinstance(seed, ast.Constant)
+                       and isinstance(seed.value, int))
+            derived = (isinstance(seed, ast.Call)
+                       and _dotted(seed.func).rsplit(".", 1)[-1]
+                       == "stable_seed")
+            if not (literal or derived):
+                self._flag("RA004", node,
+                           f"{callee}() seed must be an int literal or "
+                           f"a stable_seed(...) derivation; ad-hoc seed "
+                           f"expressions (offsets, hashes) reshuffle "
+                           f"benchmark draws when a sweep is edited")
 
     # --- function-stack tracking for RA002 --------------------
     def visit_FunctionDef(self, node: ast.FunctionDef) -> None:

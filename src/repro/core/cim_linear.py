@@ -45,36 +45,52 @@ class CIMConfig:
     backend: str = "auto"          # any registered kernel backend
     domain: str = "float"          # float | int8 — ternary-mode MXU domain
     kv_layout: str = "dense"       # dense | paged — serving KV layout
+    fidelity: str = "exact"        # exact | device — execution fidelity
 
     def plan_request(self) -> dict:
         """The fields this config contributes to plan resolution."""
         return {"backend": self.backend, "domain": self.domain,
                 "packing": self.packing, "interpret": self.interpret,
-                "kv_layout": self.kv_layout}
+                "kv_layout": self.kv_layout, "fidelity": self.fidelity}
 
-    def resolve(self) -> "CIMConfig":
+    def resolve(self, phase: str = "auto") -> "CIMConfig":
         """Pin 'auto' routing fields against the kernel backend registry
-        (capability-checked, fails loudly on an incapable backend)."""
-        from repro.kernels import default_interpret, resolve_backend
+        (capability-checked, fails loudly on an incapable backend).
+
+        ``phase`` routes the requested fidelity first
+        (``kernels.route_fidelity``): resolving a ``device`` request for
+        the accuracy-critical ``prefill`` phase pins an EXACT backend —
+        the serve engines resolve one config per phase, so prefill and
+        decode each fail loudly at construction if no backend covers
+        their routed fidelity."""
+        from repro.kernels import (default_interpret, resolve_backend,
+                                   route_fidelity)
         if self.mode not in MODES:
             raise ValueError(f"unknown cim mode {self.mode!r}; expected "
                              f"one of {sorted(MODES)}")
+        fidelity = route_fidelity(self.fidelity, phase)
         backend = self.backend
         if self.mode == "ternary":
             backend = resolve_backend("ternary", self.backend, self.domain,
                                       self.packing,
-                                      kv_layout=self.kv_layout).name
+                                      kv_layout=self.kv_layout,
+                                      fidelity=fidelity).name
         elif self.mode == "exact":
             backend = resolve_backend("cim", self.backend,
-                                      kv_layout=self.kv_layout).name
+                                      kv_layout=self.kv_layout,
+                                      fidelity=fidelity).name
         else:
             from repro.kernels import check_choice
             from repro.kernels.plan import KV_LAYOUTS
             check_choice("kv layout", self.kv_layout, KV_LAYOUTS)
+            if fidelity != "exact":
+                raise ValueError(
+                    "fidelity 'device' needs the ternary (packed-weight) "
+                    "serving path; float mode has no device model")
         interpret = (default_interpret() if self.interpret is None
                      else self.interpret)
         return dataclasses.replace(self, backend=backend,
-                                   interpret=interpret)
+                                   interpret=interpret, fidelity=fidelity)
 
 
 def linear(x: jax.Array, w: Any, cfg: CIMConfig = CIMConfig(),

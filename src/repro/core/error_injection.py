@@ -17,13 +17,35 @@ from .ternary import TernaryTensor
 
 def confusion_from_yields(per_state: jax.Array) -> jax.Array:
     """(3,) per-state yields [HRS(-1), MRS(0), LRS(+1)] -> (3,3) confusion
-    matrix rows=true (index = trit+1), cols=read."""
+    matrix rows=true (index = trit+1), cols=read.
+
+    Yields are validated: the input must be shape (3,), concrete values
+    must be finite (a NaN yield silently poisons every sampled trit
+    downstream), and each yield is clamped into [0, 1] — Monte-Carlo
+    yield estimates at small sample counts can come out at 1 + eps and
+    would otherwise produce negative error probabilities.  Every row of
+    the result sums to 1 by construction (asserted on concrete inputs).
+    """
+    per_state = jnp.asarray(per_state, jnp.float32)
+    if per_state.shape != (3,):
+        raise ValueError(f"per-state yields must have shape (3,) "
+                         f"[HRS, MRS, LRS]; got {per_state.shape}")
+    if not isinstance(per_state, jax.core.Tracer):
+        if not bool(jnp.all(jnp.isfinite(per_state))):
+            raise ValueError(f"per-state yields must be finite; got "
+                             f"{[float(v) for v in per_state]}")
+    per_state = jnp.clip(per_state, 0.0, 1.0)
     y_h, y_m, y_l = per_state[0], per_state[1], per_state[2]
     # -1 fails -> read as 0; +1 fails -> read as 0; 0 splits to +/-1 evenly
     c = jnp.array([[0.0, 0.0, 0.0]] * 3)
     c = c.at[0].set(jnp.stack([y_h, 1 - y_h, jnp.zeros(())]))
     c = c.at[1].set(jnp.stack([(1 - y_m) / 2, y_m, (1 - y_m) / 2]))
     c = c.at[2].set(jnp.stack([jnp.zeros(()), 1 - y_l, y_l]))
+    if not isinstance(c, jax.core.Tracer):
+        row_sums = jnp.sum(c, axis=-1)
+        assert bool(jnp.all(jnp.abs(row_sums - 1.0) < 1e-6)), (
+            f"confusion rows must sum to 1; got "
+            f"{[float(v) for v in row_sums]}")
     return c
 
 

@@ -1,0 +1,29 @@
+"""Deterministic, PYTHONHASHSEED-independent seed derivation.
+
+Every Monte-Carlo consumer in the repo (yield sweeps, fault campaigns,
+benchmark cells) derives its PRNG keys from :func:`stable_seed` over
+*named* parts instead of ad-hoc integer offsets (``fold_in(key, 999+n)``),
+so (i) adding a cell never silently re-seeds its neighbors, and (ii) the
+same cell reproduces bitwise across processes and Python versions
+(``hash()`` is salted per process; ``zlib.crc32`` is not).
+
+``benchmarks.common.stable_seed`` re-exports this function — lint rule
+RA004 (repro.analysis) flags ``jax.random`` key construction in
+``benchmarks/`` that bypasses it.
+"""
+from __future__ import annotations
+
+import zlib
+
+
+def stable_seed(*parts) -> int:
+    """Deterministic 31-bit seed from string-able parts (crc32, not
+    ``hash()`` — PYTHONHASHSEED-independent)."""
+    return zlib.crc32("|".join(map(str, parts)).encode()) % (2**31)
+
+
+def derive_key(*parts):
+    """``jax.random.key`` seeded by ``stable_seed(*parts)`` (imported
+    lazily so this module stays dependency-free for host-side use)."""
+    import jax
+    return jax.random.key(stable_seed(*parts))

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from . import device_models as dm
 from .cim import HRS, LRS, MRS, restore_levels_to_trits, store_trits_to_levels
+from .seeding import stable_seed
 
 STATE_TRITS = jnp.array([-1, 0, 1], dtype=jnp.int8)          # HRS, MRS, LRS
 # weights in NNs are sparse -> MRS-heavy prior (§3.4 "MRS tuned as preference")
@@ -98,10 +99,16 @@ def sl_restore_yield(key: jax.Array, n: int, num_mc: int = 4096,
 
 def yield_sweep(key: jax.Array, ns=(6, 12, 18, 30, 45, 60), m: int = 4,
                 num_mc: int = 4096, scheme: str = "tl") -> dict:
-    """Fig. 6(a): yield vs number of ReRAMs per cluster/group."""
+    """Fig. 6(a): yield vs number of ReRAMs per cluster/group.
+
+    Per-point keys are derived from the sweep *configuration*
+    (``stable_seed``-folded), not the loop index, so the Monte-Carlo
+    draw for a given (scheme, n, m, num_mc) point is identical no
+    matter which other points the sweep includes."""
     out = {}
-    for i, n in enumerate(ns):
-        k = jax.random.fold_in(key, i)
+    for n in ns:
+        k = jax.random.fold_in(
+            key, stable_seed("yield_sweep", scheme, n, m, num_mc))
         out[n] = (tl_restore_yield(k, n, m, num_mc) if scheme == "tl"
                   else sl_restore_yield(k, n, num_mc))
     return out
@@ -109,6 +116,9 @@ def yield_sweep(key: jax.Array, ns=(6, 12, 18, 30, 45, 60), m: int = 4,
 
 def cluster_sweep(key: jax.Array, ms=(1, 2, 3, 4), n: int = 60,
                   num_mc: int = 4096) -> dict:
-    """Fig. 6(b): yield vs number of clusters m (TL scheme)."""
-    return {m: tl_restore_yield(jax.random.fold_in(key, m), n, m, num_mc)
-            for m in ms}
+    """Fig. 6(b): yield vs number of clusters m (TL scheme).  Keys
+    derive from the point configuration like :func:`yield_sweep`."""
+    return {m: tl_restore_yield(
+        jax.random.fold_in(
+            key, stable_seed("cluster_sweep", "tl", n, m, num_mc)),
+        n, m, num_mc) for m in ms}

@@ -1,0 +1,166 @@
+"""The ``device``-fidelity execution backend: ternary MACs through the
+analog signal chain.
+
+Where the exact backends compute ``x @ dequant(w)`` bitwise, this
+backend executes the plan the way the TL-nvSRAM-CIM macro physically
+would — per 16-row group, each cell contributes ``1 - x*w`` discharge
+paths to the shared CBL *weighted by its sampled conductance*
+(lognormal resistance variation + CMOS mismatch from the active
+:class:`~repro.faults.model.FaultModel`), and the group count is
+digitized by ``core.cim.adc_transfer`` (round + clip to the 5-bit code
+space) before the digital shift-&-add reconstructs the MAC assuming
+*nominal* rows — exactly where conductance error and ADC saturation
+become output error.  Weight trits additionally pass the model's
+restore-confusion and stuck-at channels.
+
+Registered through the standard ``register_backend`` seam with
+``fidelities={'device'}`` only: it can never shadow an exact request,
+and an exact backend never silently serves a ``fidelity='device'``
+plan.  The active fault model is module state (``set_fault_model``) —
+swapping campaigns does not change plan resolution, so cached plans
+stay valid.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim import MacroConfig, adc_transfer
+from repro.core.packing import unpack_base3_to_planes, unpack_trits2
+from repro.core.ternary import encode_inputs
+from repro.kernels.ops import PackedTernary
+from repro.kernels.plan import BackendSpec, register_backend
+
+from .model import FaultModel
+
+DEVICE_BACKEND = "device"
+ROWS_ACTIVE = MacroConfig().rows_active      # 16 rows per CBL sense
+
+_ACTIVE_MODEL = FaultModel()
+
+
+def get_fault_model() -> FaultModel:
+    """The fault campaign the device backend currently executes under."""
+    return _ACTIVE_MODEL
+
+
+def set_fault_model(model: FaultModel) -> FaultModel:
+    """Swap the active campaign (returns the previous one).  Plans are
+    unaffected — fidelity routing is capability-level; the campaign only
+    parameterizes the runner."""
+    global _ACTIVE_MODEL
+    if not isinstance(model, FaultModel):
+        raise TypeError(f"expected a FaultModel, got {type(model).__name__}")
+    prev, _ACTIVE_MODEL = _ACTIVE_MODEL, model
+    return prev
+
+
+def weight_trit_planes(w: PackedTernary, num_trits: int = 5) -> jax.Array:
+    """Packed weights -> (q, ..., K, N) int8 trit planes (q = 1 for
+    trit2; ``num_trits`` for base3)."""
+    if w.mode == "base3":
+        return unpack_base3_to_planes(w.data, num_trits)
+    t = unpack_trits2(jnp.moveaxis(w.data, -2, 0), w.kdim)
+    return jnp.moveaxis(t, 0, -2)[None]
+
+
+def device_ternary_mac(x: jax.Array, w_trits: jax.Array,
+                       w_scale: jax.Array, model: FaultModel,
+                       num_trits: int = 5, adc_bits: int = 5,
+                       with_stats: bool = False):
+    """Analog ternary MAC: faulted trits, conductance-weighted discharge
+    counts, ADC quantization, nominal digital reconstruction.
+
+    x: (..., K) float; w_trits: (q, K, N) int8; w_scale: (N,) float.
+    Returns y (..., N) f32 — or (y, clip_lo, clip_hi) scalars counting
+    pre-clip ADC codes outside [0, 2^bits - 1] when ``with_stats``
+    (the saturation events the serve engines monitor per chunk).
+    """
+    if w_trits.ndim != 3:
+        raise ValueError(
+            f"device backend runs per-layer (q, K, N) weights; got trit "
+            f"planes of shape {w_trits.shape} (stack axes unsupported)")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    xt = encode_inputs(x2, num_trits)                   # trits (qi, B, K)
+    qw, k, n = w_trits.shape
+    ft = model.fault_trits(w_trits, "w")                # (qw, K, N)
+    gmul = model.conductance_multiplier(ft, "g")        # (qw, K, N) f32
+    qi, b, _ = xt.trits.shape
+    ra = ROWS_ACTIVE
+    g = -(-k // ra)
+    pad = g * ra - k
+    xg = xt.trits
+    if pad:
+        xg = jnp.pad(xg, ((0, 0), (0, 0), (0, pad)))
+        ft = jnp.pad(ft, ((0, 0), (0, pad), (0, 0)))
+        gmul = jnp.pad(gmul, ((0, 0), (0, pad), (0, 0)))
+    xg = xg.reshape(qi, b, g, ra).astype(jnp.float32)
+    wg = (ft.astype(jnp.float32) * gmul).reshape(qw, g, ra, n)
+    gg = gmul.reshape(qw, g, ra, n)
+    # active rows: padded rows are deactivated (0 discharge paths)
+    act = (jnp.arange(g * ra).reshape(g, ra) < k).astype(jnp.float32)
+    # analog CBL count per group: sum_r act * gmul * (1 - x*w)
+    base = jnp.einsum("gr,jgrn->jgn", act, gg)
+    mac = jnp.einsum("ibgr,jgrn->ijbgn", xg, wg)
+    count = base[None, :, None, :, :] - mac             # (qi,qw,B,G,N)
+    noise = None
+    if model.adc_noise_sigma > 0.0:
+        noise = model.adc_noise_sigma * jax.random.normal(
+            model.key_for("adc", b, k, n), count.shape)
+    code = adc_transfer(count, adc_bits, noise)
+    # digital reconstruction assumes the NOMINAL count offset
+    rows_real = jnp.minimum(ra, jnp.maximum(0, k - jnp.arange(g) * ra))
+    mac_q = rows_real[None, None, None, :, None] - code
+    p3i = jnp.array([3**i for i in range(qi)], jnp.int32)
+    p3j = jnp.array([3**j for j in range(qw)], jnp.int32)
+    y_int = jnp.einsum("ij,ijbn->bn", p3i[:, None] * p3j[None, :],
+                       mac_q.sum(axis=3))
+    y = (y_int.astype(jnp.float32) * xt.scale
+         * w_scale.astype(jnp.float32)).reshape(*lead, n)
+    if not with_stats:
+        return y
+    pre = jnp.round(count if noise is None else count + noise)
+    clip_lo = jnp.sum(pre < 0).astype(jnp.int32)
+    clip_hi = jnp.sum(pre > 2**adc_bits - 1).astype(jnp.int32)
+    return y, clip_lo, clip_hi
+
+
+def _run_device(plan, x, w):
+    if not isinstance(w, PackedTernary):
+        raise ValueError("device backend needs PackedTernary weights; "
+                         f"got {type(w).__name__}")
+    num_trits = plan.num_trits or 5
+    planes = weight_trit_planes(w, num_trits)
+    return device_ternary_mac(x, planes, w.scale, get_fault_model(),
+                              num_trits=num_trits,
+                              adc_bits=plan.adc_bits or 5)
+
+
+def register_device_backend(model: Optional[FaultModel] = None, *,
+                            priority: int = 60,
+                            override: bool = True) -> None:
+    """Register (or re-register) the device-fidelity backend, optionally
+    activating a new fault campaign.  One ``register_backend`` call —
+    no edits to call sites, ``ops``, or ``CIMConfig`` (the standing
+    extension seam)."""
+    if model is not None:
+        set_fault_model(model)
+    register_backend(BackendSpec(
+        name=DEVICE_BACKEND,
+        ops=frozenset({"ternary"}),
+        domains=frozenset({"float"}),
+        packings=frozenset({"base3", "trit2"}),
+        platforms=frozenset({"cpu", "gpu", "tpu"}),
+        priority=priority,
+        runner=_run_device,
+        kv_layouts=frozenset({"dense", "paged"}),
+        fidelities=frozenset({"device"}),
+    ), override=override)
+
+
+# registration happens on import (kernels.backends imports this module
+# after the exact built-ins), exactly like the built-in backends
+register_device_backend()

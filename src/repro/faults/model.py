@@ -1,0 +1,143 @@
+"""Composable, seeded fault models for device-fidelity execution.
+
+A :class:`FaultModel` is a frozen, hashable description of one device
+instance's non-idealities — the *campaign*: every channel draws from
+keys derived with ``core.seeding.stable_seed`` over (campaign seed,
+channel name, tensor shape), so the same model applied to the same
+tensor produces bitwise-identical faults across calls, processes, and
+chunk boundaries.  Channels compose (each is independently optional):
+
+  restore_yield — per-state restore-error confusion (HRS/MRS/LRS) from
+      the measured TL yield (``core.yield_model.tl_restore_yield``),
+      sampled through ``core.error_injection.inject_trit_errors``;
+  stuck_rate    — stuck-at cells: a per-cell mask frozen to a random
+      trit, overriding every later restore (fabrication defects);
+  variation     — lognormal resistance variation + CMOS mismatch via
+      ``device_models.sample_resistance`` / ``discharge_conductance``,
+      exposed as a multiplicative conductance error on each cell's
+      discharge path (what the ADC actually integrates);
+  drift_rate    — per-chunk read-disturb/drift: the serving engines
+      apply this channel between decode chunks, so error ACCUMULATES
+      until a restore-scrub repairs it (``faults.scrub``).
+
+Compose variants with :func:`dataclasses.replace`; build a model at the
+measured paper yield with :func:`measured_fault_model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import device_models as dm
+from repro.core.error_injection import inject_trit_errors
+from repro.core.seeding import stable_seed
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One device instance's fault channels (frozen + hashable: usable
+    as a jit-static argument and a campaign cache key)."""
+    seed: int = 0
+    restore_yield: Optional[tuple] = None    # (y_HRS, y_MRS, y_LRS)
+    stuck_rate: float = 0.0
+    variation: bool = True
+    drift_rate: float = 0.0                  # per-chunk disturb channel
+    adc_noise_sigma: float = 0.0             # ADC readout noise (LSB)
+    device: dm.DeviceParams = dm.DeviceParams()
+
+    def __post_init__(self):
+        if self.restore_yield is not None:
+            ry = tuple(float(y) for y in self.restore_yield)
+            if len(ry) != 3:
+                raise ValueError(
+                    f"restore_yield must be 3 per-state yields "
+                    f"[HRS, MRS, LRS]; got {self.restore_yield!r}")
+            object.__setattr__(self, "restore_yield", ry)
+        for name in ("stuck_rate", "drift_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1]; got {v}")
+
+    # ------------------------------------------------------------ keys
+    def key_for(self, *parts) -> jax.Array:
+        """Deterministic campaign key for a named channel draw."""
+        return jax.random.key(stable_seed("faults", self.seed, *parts))
+
+    # -------------------------------------------------------- channels
+    def fault_trits(self, trits: jax.Array, *parts) -> jax.Array:
+        """Restore-confusion + stuck-at channels on a trit tensor
+        ((q, ..., K, N) int8 in {-1, 0, 1}).  Deterministic per
+        (campaign, parts, shape) — re-applying yields the same faults."""
+        shape_tag = ("x".join(map(str, trits.shape)),) + parts
+        out = trits
+        if self.restore_yield is not None:
+            out = inject_trit_errors(
+                out, jnp.asarray(self.restore_yield, jnp.float32),
+                self.key_for("restore", *shape_tag))
+        if self.stuck_rate > 0.0:
+            km, kv = jax.random.split(self.key_for("stuck", *shape_tag))
+            mask = jax.random.bernoulli(km, self.stuck_rate, trits.shape)
+            stuck = jax.random.randint(kv, trits.shape, -1, 2,
+                                       dtype=jnp.int32).astype(jnp.int8)
+            out = jnp.where(mask, stuck, out)
+        return out
+
+    def conductance_multiplier(self, trits: jax.Array,
+                               *parts) -> jax.Array:
+        """Per-cell multiplicative conductance error of the discharge
+        path: sampled resistance at each trit's stored level (lognormal
+        filament-gap variation) + CMOS mismatch, normalized by the
+        level-nominal conductance.  Ones when ``variation`` is off."""
+        if not self.variation:
+            return jnp.ones(trits.shape, jnp.float32)
+        shape_tag = ("x".join(map(str, trits.shape)),) + parts
+        kr, kc = jax.random.split(self.key_for("gvar", *shape_tag))
+        level = (trits.astype(jnp.int32) + 1)      # -1/0/+1 -> HRS/MRS/LRS
+        r = dm.sample_resistance(level, kr, self.device, trits.shape)
+        cmos = self.device.cmos_sigma_rel * jax.random.normal(
+            kc, trits.shape)
+        g = dm.discharge_conductance(r, self.device, cmos)
+        g_nom = dm.discharge_conductance(
+            dm.level_resistance(level, self.device), self.device)
+        return (g / g_nom).astype(jnp.float32)
+
+    # ------------------------------------------------------------ misc
+    def describe(self) -> dict:
+        """JSON-friendly campaign record (bench artifacts)."""
+        return {"seed": self.seed,
+                "restore_yield": (list(self.restore_yield)
+                                  if self.restore_yield else None),
+                "stuck_rate": self.stuck_rate,
+                "variation": self.variation,
+                "drift_rate": self.drift_rate,
+                "adc_noise_sigma": self.adc_noise_sigma}
+
+
+def measured_fault_model(n: int = 60, m: int = 4, num_mc: int = 4096,
+                         seed: int = 0, variation: bool = False,
+                         **channels) -> FaultModel:
+    """FaultModel at the MEASURED TL restore yield: run the Monte-Carlo
+    yield model (Fig. 6 methodology) for the paper's cluster
+    configuration and pin its per-state yields as the restore-confusion
+    channel.  Extra ``channels`` kwargs forward to :class:`FaultModel`
+    (e.g. ``drift_rate=``, ``stuck_rate=``).
+
+    ``variation`` defaults to OFF here (unlike the raw
+    :class:`FaultModel`): in the TL-nvSRAM architecture the ternary MAC
+    discharges through the SRAM array — ReRAM resistance variation acts
+    on the *restore* path, and the Monte-Carlo yield model has already
+    sampled those same lognormal resistances into the per-state yields
+    this campaign pins.  Applying the lognormal channel to the MAC
+    conductances on top of that double-counts the variation (and models
+    a ReRAM-CIM macro, not this paper's).  Pass ``variation=True`` for
+    a ReRAM-in-the-MAC what-if campaign."""
+    from repro.core.yield_model import tl_restore_yield
+    key = jax.random.key(stable_seed("measured_fault_model", seed, n, m,
+                                     num_mc))
+    y = tl_restore_yield(key, n, m=m, num_mc=num_mc)
+    per_state = tuple(float(v) for v in y["per_state"])
+    return FaultModel(seed=seed, restore_yield=per_state,
+                      variation=variation, **channels)

@@ -1,0 +1,155 @@
+"""Restore-scrub and drift channels over packed parameter trees.
+
+The serve engines use three operations, all deterministic per campaign
+key and all device-resident (no host transfer):
+
+  * :func:`disturb_packed_params` — the accumulated-error channel: each
+    trit of every packed weight is replaced by a uniform random trit
+    with probability ``rate``.  Applied once per decode chunk with a
+    chunk-indexed key, so error COMPOUNDS monotonically while serving.
+  * :func:`scrub_packed_params` — the paper's DC-power-free restore as
+    an online repair: re-restore every weight tile from its pristine
+    TL-ReRAM contents (store -> restore through the measured-yield
+    confusion channel).  Accumulated drift is discarded; the residual
+    error is bounded by ``1 - yield`` per state, independent of how
+    long the engine ran since the last scrub.
+  * :func:`packed_trit_error_rate` — fraction of trits differing
+    between two packed trees (the repair metric the scrub gate pins).
+
+``adc_probe`` is the per-chunk health counter: the worst-case all-ones
+input drive over the served weights, counting row-group CBL counts that
+would saturate the ADC code space.  It returns device scalars sized to
+ride the engines' single per-chunk transfer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim import MacroConfig
+from repro.core.error_injection import inject_trit_errors
+from repro.core.packing import (pack_trit_planes_base3, pack_trits2,
+                                unpack_base3_to_planes, unpack_trits2)
+from repro.kernels.ops import PackedTernary
+
+ROWS_ACTIVE = MacroConfig().rows_active
+
+
+def packed_to_trits(leaf: PackedTernary, num_trits: int = 5) -> jax.Array:
+    """PackedTernary -> (q, ..., K, N) trit planes."""
+    if leaf.mode == "base3":
+        return unpack_base3_to_planes(leaf.data, num_trits)
+    t = unpack_trits2(jnp.moveaxis(leaf.data, -2, 0), leaf.kdim)
+    return jnp.moveaxis(t, 0, -2)[None]
+
+
+def trits_to_packed(trits: jax.Array, leaf: PackedTernary) -> PackedTernary:
+    """Inverse of :func:`packed_to_trits` (scale/mode preserved)."""
+    if leaf.mode == "base3":
+        data = pack_trit_planes_base3(trits)
+    else:
+        data = jnp.moveaxis(pack_trits2(jnp.moveaxis(trits[0], -2, 0)),
+                            0, -2)
+    return PackedTernary(data, leaf.scale, leaf.mode)
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedTernary)
+
+
+def _map_packed(params, fn, num_trits: int):
+    """Apply ``fn(trits, leaf_index) -> trits`` to every PackedTernary
+    leaf (other leaves pass through untouched)."""
+    counter = [0]
+
+    def apply(leaf):
+        if not _is_packed(leaf):
+            return leaf
+        i = counter[0]
+        counter[0] += 1
+        return trits_to_packed(fn(packed_to_trits(leaf, num_trits), i),
+                               leaf)
+
+    return jax.tree_util.tree_map(apply, params, is_leaf=_is_packed)
+
+
+def disturb_packed_params(params, rate: float, key: jax.Array,
+                          num_trits: int = 5):
+    """One chunk's drift/read-disturb step: every trit independently
+    replaced by a uniform random trit with probability ``rate``."""
+    if rate <= 0.0:
+        return params
+
+    def disturb(trits, i):
+        km, kv = jax.random.split(jax.random.fold_in(key, i))
+        flip = jax.random.bernoulli(km, rate, trits.shape)
+        rnd = jax.random.randint(kv, trits.shape, -1, 2,
+                                 dtype=jnp.int32).astype(jnp.int8)
+        return jnp.where(flip, rnd, trits)
+
+    return _map_packed(params, disturb, num_trits)
+
+
+def scrub_packed_params(pristine, per_state_yield, key: jax.Array,
+                        num_trits: int = 5):
+    """Restore-scrub: rebuild the served weights from the PRISTINE tree
+    through the store->restore confusion channel at ``per_state_yield``
+    (None = ideal restore, returns the pristine tree).  This is the
+    repair step — whatever the served tree drifted to is discarded."""
+    if per_state_yield is None:
+        return pristine
+    y = jnp.asarray(per_state_yield, jnp.float32)
+
+    def restore(trits, i):
+        return inject_trit_errors(trits, y, jax.random.fold_in(key, i))
+
+    return _map_packed(pristine, restore, num_trits)
+
+
+def packed_trit_error_rate(params_a, params_b, num_trits: int = 5) -> float:
+    """Fraction of trits that differ between two packed trees (same
+    structure).  Host-side diagnostic — the scrub-repair metric."""
+    leaves_a = [x for x in jax.tree_util.tree_leaves(
+        params_a, is_leaf=_is_packed) if _is_packed(x)]
+    leaves_b = [x for x in jax.tree_util.tree_leaves(
+        params_b, is_leaf=_is_packed) if _is_packed(x)]
+    if len(leaves_a) != len(leaves_b):
+        raise ValueError(
+            f"packed trees differ in structure: {len(leaves_a)} vs "
+            f"{len(leaves_b)} packed leaves")
+    diff = total = 0
+    for a, b in zip(leaves_a, leaves_b):
+        ta = packed_to_trits(a, num_trits)
+        tb = packed_to_trits(b, num_trits)
+        diff += int(jnp.sum(ta != tb))
+        total += ta.size
+    return diff / total if total else 0.0
+
+
+def adc_probe(params, adc_bits: int = 5, num_trits: int = 5):
+    """Worst-case saturation probe over the FIRST packed leaf: drive
+    every row with input trit +1 and count row-group CBL counts outside
+    the ADC code space [0, 2^bits - 1].  Returns (clip_lo, clip_hi)
+    device int32 scalars (zero-zero when no packed leaf exists)."""
+    for leaf in jax.tree_util.tree_leaves(params, is_leaf=_is_packed):
+        if _is_packed(leaf):
+            trits = packed_to_trits(leaf, num_trits)
+            if trits.ndim != 3:
+                trits = trits.reshape(trits.shape[0], -1,
+                                      trits.shape[-1])
+            q, k, n = trits.shape
+            ra = ROWS_ACTIVE
+            g = -(-k // ra)
+            pad = g * ra - k
+            if pad:
+                trits = jnp.pad(trits, ((0, 0), (0, pad), (0, 0)))
+            wg = trits.reshape(q, g, ra, n).astype(jnp.int32)
+            rows_real = jnp.minimum(
+                ra, jnp.maximum(0, k - jnp.arange(g) * ra))
+            # all-ones drive: count = rows_real - sum_r w
+            count = rows_real[None, :, None] - wg.sum(axis=2)
+            clip_lo = jnp.sum(count < 0).astype(jnp.int32)
+            clip_hi = jnp.sum(count > 2**adc_bits - 1).astype(jnp.int32)
+            return clip_lo, clip_hi
+    zero = jnp.zeros((), jnp.int32)
+    return zero, zero

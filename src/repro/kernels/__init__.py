@@ -19,17 +19,19 @@ from . import ops, ref                                    # noqa: F401
 from . import backends as _backends                       # noqa: F401
 from .ops import (PackedTernary, pack_weights,            # noqa: F401
                   quantize_acts_int8)
-from .plan import (KV_LAYOUTS, BackendSpec, ExecutionPlan,  # noqa: F401
-                   backend_names, check_choice, default_interpret,
-                   execute, get_backend, plan_cache_clear,
-                   plan_cache_info, plan_matmul, register_backend,
-                   resolve_backend, shape_of, unregister_backend)
+from .plan import (FIDELITIES, KV_LAYOUTS, BackendSpec,   # noqa: F401
+                   ExecutionPlan, backend_names, check_choice,
+                   default_interpret, execute, get_backend,
+                   plan_cache_clear, plan_cache_info, plan_matmul,
+                   register_backend, resolve_backend, route_fidelity,
+                   shape_of, unregister_backend)
 
 __all__ = [
-    "BackendSpec", "ExecutionPlan", "KV_LAYOUTS", "PackedTernary",
-    "backend_names", "check_choice", "default_interpret", "execute",
-    "get_backend", "ops", "pack_weights", "plan_cache_clear",
-    "plan_cache_info", "plan_matmul", "quantize_acts_int8", "ref",
-    "register_backend", "resolve_backend", "shape_of",
+    "BackendSpec", "ExecutionPlan", "FIDELITIES", "KV_LAYOUTS",
+    "PackedTernary", "backend_names", "check_choice",
+    "default_interpret", "execute", "get_backend", "ops",
+    "pack_weights", "plan_cache_clear", "plan_cache_info",
+    "plan_matmul", "quantize_acts_int8", "ref", "register_backend",
+    "resolve_backend", "route_fidelity", "shape_of",
     "unregister_backend",
 ]

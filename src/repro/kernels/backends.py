@@ -111,7 +111,12 @@ def _run_ref(plan, x, w):
 # declare {dense, paged} and a paged serving loop can be planned on any
 # of them.  A future layout-specialized executor (e.g. a fused paged-
 # attention kernel) would declare only the layouts it implements.
+# All built-ins are exact-fidelity: the bitwise kernel contract.  The
+# fault-injected analog path registers separately (repro.faults) and
+# declares fidelity 'device' only, so it can never shadow an exact
+# request and an exact backend never silently serves a device request.
 _ALL_KV_LAYOUTS = frozenset({"dense", "paged"})
+_EXACT = frozenset({"exact"})
 
 register_backend(BackendSpec(
     name="pallas",
@@ -123,6 +128,7 @@ register_backend(BackendSpec(
     runner=_run_pallas,
     needs_blocks=True,
     kv_layouts=_ALL_KV_LAYOUTS,
+    fidelities=_EXACT,
 ))
 
 register_backend(BackendSpec(
@@ -134,6 +140,7 @@ register_backend(BackendSpec(
     priority=50,
     runner=_run_xla,
     kv_layouts=_ALL_KV_LAYOUTS,
+    fidelities=_EXACT,
 ))
 
 register_backend(BackendSpec(
@@ -145,4 +152,11 @@ register_backend(BackendSpec(
     priority=10,
     runner=_run_ref,
     kv_layouts=_ALL_KV_LAYOUTS,
+    fidelities=_EXACT,
 ))
+
+# The device-fidelity backend (fault-injected analog MAC: sampled
+# conductances + ADC transfer over a seeded FaultModel) registers from
+# repro.faults.backend — imported last so the built-in registrations
+# above are already in place when it joins the registry.
+from repro.faults import backend as _faults_backend  # noqa: E402,F401

@@ -37,6 +37,7 @@ DOMAINS = ("float", "int8")
 PACKINGS = ("base3", "trit2")
 PHASES = ("auto", "decode", "prefill")
 KV_LAYOUTS = ("dense", "paged")
+FIDELITIES = ("exact", "device")
 
 CIM_DEFAULT_BLOCKS = (128, 128, 128)    # kernels.cim_mac defaults
 
@@ -70,8 +71,14 @@ class ExecutionPlan:
     feeds this matmul from (``dense`` slot caches or the ``paged`` block
     pool): backends declare which layouts they can be planned under, so
     paged serving is a registered executor capability, not a kwarg
-    threaded through ops/serve.  ``adc_bits`` / ``num_trits`` are set
-    for the macro-exact ``cim`` op only.
+    threaded through ops/serve.  ``fidelity`` names the execution
+    fidelity the plan was resolved for: ``exact`` (the bitwise kernel
+    contract) or ``device`` (fault-injected analog path — sampled
+    conductances + ADC transfer, ``repro.faults``).  The requested
+    fidelity is routed through :func:`route_fidelity` first, so
+    accuracy-critical phases (prefill) resolve to exact backends even
+    under a ``device`` request.  ``adc_bits`` / ``num_trits`` are set
+    for the macro-exact ``cim`` op and for device-fidelity plans.
     """
     op: str                                  # ternary | cim
     backend: str                             # resolved name (never 'auto')
@@ -84,8 +91,9 @@ class ExecutionPlan:
     blocks: Optional[tuple] = None           # (bm, bn, bk) | None
     interpret: bool = False
     kv_layout: str = "dense"                 # dense | paged
-    adc_bits: Optional[int] = None           # cim op only
-    num_trits: Optional[int] = None          # cim op only
+    adc_bits: Optional[int] = None           # cim op / device fidelity
+    num_trits: Optional[int] = None          # cim op / device fidelity
+    fidelity: str = "exact"                  # exact | device (post-routing)
 
     @property
     def shape(self) -> tuple:
@@ -97,7 +105,8 @@ class ExecutionPlan:
                 "packing": self.packing, "phase": self.phase,
                 "blocks": list(self.blocks) if self.blocks else None,
                 "interpret": self.interpret,
-                "kv_layout": self.kv_layout}
+                "kv_layout": self.kv_layout,
+                "fidelity": self.fidelity}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +120,11 @@ class BackendSpec:
     planned under (``dense`` and/or ``paged``): a paged serving loop
     requests ``kv_layout='paged'`` and a dense-only backend is rejected
     at plan time instead of silently reading a layout it cannot.
+    ``fidelities`` is the set of execution fidelities the backend
+    implements: the built-ins are ``exact`` (bitwise kernel contract);
+    the fault-injected analog path (``repro.faults``) registers a
+    ``device``-only backend, so a fidelity request is a capability
+    match, not a kwarg threaded through ops/serve.
     """
     name: str
     ops: frozenset
@@ -121,12 +135,15 @@ class BackendSpec:
     runner: Callable
     needs_blocks: bool = False
     kv_layouts: frozenset = frozenset({"dense"})
+    fidelities: frozenset = frozenset({"exact"})
 
     def supports(self, op: str, domain: str, packing: str,
-                 platform: str, kv_layout: str = "dense") -> bool:
+                 platform: str, kv_layout: str = "dense",
+                 fidelity: str = "exact") -> bool:
         return (op in self.ops and domain in self.domains
                 and packing in self.packings and platform in self.platforms
-                and kv_layout in self.kv_layouts)
+                and kv_layout in self.kv_layouts
+                and fidelity in self.fidelities)
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -169,24 +186,43 @@ def get_backend(name: str) -> BackendSpec:
     return _REGISTRY[name]
 
 
+def route_fidelity(fidelity: str, phase: str) -> str:
+    """Noise-aware routing policy: which fidelity a phase actually runs.
+
+    ``exact`` requests always stay exact.  A ``device`` request runs the
+    fault-injected path only for error-tolerant phases (``decode``
+    sampling, ``auto``); the accuracy-critical ``prefill`` phase is
+    routed back to an exact backend — prefill mistakes corrupt the
+    whole KV prefix, while a decode-step upset perturbs one sampled
+    token (the graceful-degradation contract of the serve engines)."""
+    check_choice("fidelity", fidelity, FIDELITIES)
+    check_choice("phase", phase, PHASES)
+    if fidelity == "device" and phase == "prefill":
+        return "exact"
+    return fidelity
+
+
 def resolve_backend(op: str = "ternary", backend: str = "auto",
                     domain: str = "float", packing: str = "base3",
                     platform: Optional[str] = None,
-                    kv_layout: str = "dense") -> BackendSpec:
+                    kv_layout: str = "dense",
+                    fidelity: str = "exact") -> BackendSpec:
     """Capability match: 'auto' picks the highest-priority backend that
-    supports (op, domain, packing, kv_layout) on `platform`; an explicit
-    name is validated against its declared capabilities and fails
-    loudly."""
+    supports (op, domain, packing, kv_layout, fidelity) on `platform`;
+    an explicit name is validated against its declared capabilities and
+    fails loudly."""
     _ensure_builtin_backends()
     if platform is None:
         platform = _platform()
     if backend in (None, "auto"):
         cands = [s for s in _REGISTRY.values()
-                 if s.supports(op, domain, packing, platform, kv_layout)]
+                 if s.supports(op, domain, packing, platform, kv_layout,
+                               fidelity)]
         if not cands:
             raise ValueError(
                 f"no registered backend supports op={op!r} domain={domain!r} "
-                f"packing={packing!r} kv_layout={kv_layout!r} on platform "
+                f"packing={packing!r} kv_layout={kv_layout!r} "
+                f"fidelity={fidelity!r} on platform "
                 f"{platform!r}; registered: {backend_names()}")
         return max(cands, key=lambda s: s.priority)
     spec = get_backend(backend)
@@ -194,6 +230,7 @@ def resolve_backend(op: str = "ternary", backend: str = "auto",
                               ("domain", domain, spec.domains),
                               ("packing mode", packing, spec.packings),
                               ("kv layout", kv_layout, spec.kv_layouts),
+                              ("fidelity", fidelity, spec.fidelities),
                               ("platform", platform, spec.platforms)):
         if value not in have:
             raise ValueError(
@@ -225,15 +262,18 @@ def shape_of(x, w) -> tuple:
 
 @functools.lru_cache(maxsize=PLAN_CACHE_SIZE)
 def _resolve(op, m, k, n, phase, backend, domain, packing, interpret,
-             bm, bn, bk, kv_layout, adc_bits, num_trits,
+             bm, bn, bk, kv_layout, fidelity, adc_bits, num_trits,
              platform) -> ExecutionPlan:
     check_choice("op", op, OPS)
     check_choice("phase", phase, PHASES)
     check_choice("domain", domain, DOMAINS)
     check_choice("packing mode", packing, PACKINGS)
     check_choice("kv layout", kv_layout, KV_LAYOUTS)
+    # noise-aware routing BEFORE capability match: a device request on
+    # an accuracy-critical phase resolves against exact backends
+    fidelity = route_fidelity(fidelity, phase)
     spec = resolve_backend(op, backend, domain, packing, platform,
-                           kv_layout)
+                           kv_layout, fidelity)
     if interpret is None:
         interpret = default_interpret(platform)
     blocks = None
@@ -253,7 +293,7 @@ def _resolve(op, m, k, n, phase, backend, domain, packing, interpret,
                          packing=packing, m=m, k=k, n=n, phase=phase,
                          blocks=blocks, interpret=bool(interpret),
                          kv_layout=kv_layout, adc_bits=adc_bits,
-                         num_trits=num_trits)
+                         num_trits=num_trits, fidelity=fidelity)
 
 
 def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
@@ -262,21 +302,25 @@ def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
                 interpret: Optional[bool] = None, bm: Optional[int] = None,
                 bn: Optional[int] = None, bk: Optional[int] = None,
                 kv_layout: Optional[str] = None,
+                fidelity: Optional[str] = None,
                 adc_bits: Optional[int] = None,
                 num_trits: Optional[int] = None) -> ExecutionPlan:
     """Resolve an :class:`ExecutionPlan` for a (M, K, N) matmul.
 
     ``cfg`` is any object carrying plan-request attributes (``backend``,
-    ``domain``, ``packing``, ``interpret``, ``kv_layout`` — e.g. a
-    ``core.cim_linear.CIMConfig``); explicit keyword arguments override
-    it.  Resolution is cached on the full request (bounded at
+    ``domain``, ``packing``, ``interpret``, ``kv_layout``, ``fidelity``
+    — e.g. a ``core.cim_linear.CIMConfig``); explicit keyword arguments
+    override it.  Resolution is cached on the full request (bounded at
     ``PLAN_CACHE_SIZE`` entries — see ``plan_cache_info``), so calling
     this per layer inside a jit trace costs a dict lookup; pass
     ``bm/bn/bk`` to pin block shapes (tests, sweeps), otherwise
     block-tiled backends get the shape-adaptive choice.
     ``kv_layout='paged'`` requests a backend capable of running under
-    the paged KV block pool.  ``op='cim'`` plans the macro-exact CIM
-    MAC (``adc_bits`` / ``num_trits`` default 5).
+    the paged KV block pool.  ``fidelity='device'`` requests the
+    fault-injected analog path (routed per phase — see
+    :func:`route_fidelity`).  ``op='cim'`` plans the macro-exact CIM
+    MAC (``adc_bits`` / ``num_trits`` default 5, as do device-fidelity
+    ternary plans, whose ADC model needs them).
     """
     m, k, n = (int(s) for s in shape)
     if cfg is not None:
@@ -285,7 +329,7 @@ def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
         req = (cfg.plan_request() if hasattr(cfg, "plan_request") else
                {f: getattr(cfg, f, None)
                 for f in ("backend", "domain", "packing", "interpret",
-                          "kv_layout")})
+                          "kv_layout", "fidelity")})
         backend = backend if backend is not None else req.get("backend")
         domain = domain if domain is not None else req.get("domain")
         packing = packing if packing is not None else req.get("packing")
@@ -293,7 +337,10 @@ def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
                      else req.get("interpret"))
         kv_layout = (kv_layout if kv_layout is not None
                      else req.get("kv_layout"))
-    if op == "cim":
+        fidelity = (fidelity if fidelity is not None
+                    else req.get("fidelity"))
+    fidelity = "exact" if fidelity is None else fidelity
+    if op == "cim" or fidelity == "device":
         adc_bits = 5 if adc_bits is None else adc_bits
         num_trits = 5 if num_trits is None else num_trits
     _ensure_builtin_backends()
@@ -303,7 +350,7 @@ def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,
                     "base3" if packing is None else packing,
                     interpret, bm, bn, bk,
                     "dense" if kv_layout is None else kv_layout,
-                    adc_bits, num_trits, _platform())
+                    fidelity, adc_bits, num_trits, _platform())
 
 
 def plan_cache_info():

@@ -46,6 +46,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              pure_dp: bool = False, kv_cache: str = "",
              decode_loop: int = 0, continuous: int = 0,
              kv_layout: str = "dense", page_size: int = 16,
+             fidelity: str = "exact",
              extra_tags: dict | None = None) -> dict:
     from repro import configs
     from repro.configs.shapes import SHAPES, runnable
@@ -63,6 +64,10 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     from repro.roofline import analyze_compiled
     from repro.core.cim_linear import CIMConfig
 
+    if fidelity == "device" and not packed:
+        raise ValueError("fidelity 'device' requires packed ternary "
+                         "weights (--packed); the device model faults "
+                         "packed trits")
     cfg = configs.get(arch)
     cell = SHAPES[shape]
     meta = {"arch": arch, "shape": shape, "mesh": _mesh_tag(multi_pod),
@@ -110,11 +115,30 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     model = registry.build(cfg)
     # resolved once against the kernel registry: the dry-run pins the
     # xla backend (Pallas TPU kernels cannot lower on the CPU host
-    # platform) and records the resolved routing in the cell metadata
-    cim = CIMConfig(mode="ternary", packing=packed,
-                    backend="xla").resolve() if packed else None
-    if cim is not None:
+    # platform) and records the resolved routing in the cell metadata.
+    # A 'device' fidelity request cannot pin xla (the fault-injected
+    # backend is the only device-capable one): it resolves 'auto' under
+    # the cell's phase, so decode cells lower the device path and
+    # prefill cells route back to an exact backend (route_fidelity).
+    cim = None
+    if packed:
+        if fidelity == "device":
+            if cell.kind == "train":
+                raise ValueError("--fidelity device is a serving "
+                                 "fidelity; train cells have no device "
+                                 "path")
+            from repro import faults
+            faults.set_fault_model(faults.measured_fault_model(
+                num_mc=1024))
+            phase = "decode" if cell.kind == "decode" else "prefill"
+            cim = CIMConfig(mode="ternary", packing=packed,
+                            backend="auto",
+                            fidelity="device").resolve(phase=phase)
+        else:
+            cim = CIMConfig(mode="ternary", packing=packed,
+                            backend="xla").resolve()
         meta["cim_backend"] = cim.backend
+        meta["cim_fidelity"] = cim.fidelity
 
     t0 = time.monotonic()
     if cell.kind == "train":
@@ -335,6 +359,12 @@ def main(argv=None):
                         "(serve.make_paged_decode_loop)")
     p.add_argument("--page-size", type=int, default=16,
                    help="positions per KV page for --kv paged")
+    p.add_argument("--fidelity", default="exact",
+                   choices=("exact", "device"),
+                   help="execution fidelity for packed cells: 'device' "
+                        "lowers decode through the fault-injected "
+                        "analog backend (prefill cells route back to "
+                        "exact — see repro.faults)")
     p.add_argument("--out-dir", default=DEFAULT_OUT)
     p.add_argument("--tag", default=None,
                    help="suffix for the output file (perf experiments)")
@@ -360,7 +390,7 @@ def main(argv=None):
                    pure_dp=args.pure_dp, kv_cache=args.kv_cache,
                    decode_loop=args.decode_loop,
                    continuous=args.continuous, kv_layout=args.kv,
-                   page_size=args.page_size)
+                   page_size=args.page_size, fidelity=args.fidelity)
     if args.tag:
         res["tag"] = args.tag
         os.makedirs(args.out_dir, exist_ok=True)

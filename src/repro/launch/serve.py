@@ -46,6 +46,16 @@ def main(argv=None):
                    help="kernel execution backend (any registered name; "
                         "'auto' = capability match, see "
                         "src/repro/kernels/README.md)")
+    p.add_argument("--fidelity", default="exact",
+                   choices=("exact", "device"),
+                   help="execution fidelity: 'device' serves decode "
+                        "through the fault-injected analog backend at "
+                        "the measured TL restore yield (prefill stays "
+                        "exact — see repro.faults); requires --packed")
+    p.add_argument("--scrub-every", type=int, default=8,
+                   help="decode chunks between restore-scrub repairs "
+                        "under --fidelity device (0 disables scrubbing "
+                        "— degradation accumulates)")
     p.add_argument("--legacy-loop", action="store_true",
                    help="per-step decode driver (one host sync per token) "
                         "instead of the on-device lax.while_loop")
@@ -79,6 +89,13 @@ def main(argv=None):
     if args.kv == "paged" and not args.continuous:
         p.error("--kv paged requires --continuous (the paged pool is a "
                 "continuous-batching slot-pool layout)")
+    if args.fidelity == "device" and not args.packed:
+        p.error("--fidelity device requires --packed (the device model "
+                "faults packed ternary weights; float serving has no "
+                "device path)")
+    if args.fidelity == "device" and not args.continuous:
+        p.error("--fidelity device requires --continuous (drift + "
+                "restore-scrub are per-chunk hooks of the Scheduler)")
 
     from repro import configs
     from repro.core.cim_linear import CIMConfig, hbm_bytes, ternarize_params
@@ -92,19 +109,29 @@ def main(argv=None):
     params = model.init(jax.random.key(args.seed))
     raw_bytes = hbm_bytes(params)
 
-    cim = None
+    cim = cim_decode = None
     if args.packed:
-        # resolve once: 'auto' pins to the registry's capability match
-        # for (domain, packing) on this platform, and a bad request
-        # fails here instead of inside the first decode step
+        if args.fidelity == "device":
+            # pin the measured-yield fault campaign BEFORE resolution so
+            # the device backend serves the paper's TL restore yield
+            from repro import faults
+            faults.set_fault_model(faults.measured_fault_model(
+                seed=args.seed, drift_rate=0.001))
+        # fail fast for BOTH phases the engines will resolve (a device
+        # request splits decode->device / prefill->exact; pinning the
+        # decode resolution into the request would poison the prefill
+        # one, so the engines get the unresolved request)
         cim = CIMConfig(mode="ternary", packing=args.packed,
-                        domain=args.domain, backend=args.backend).resolve()
+                        domain=args.domain, backend=args.backend,
+                        fidelity=args.fidelity)
+        cim_decode = cim.resolve()
+        cim.resolve(phase="prefill")
         params = ternarize_params(params, cim)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"weights {raw_bytes/1e6:.1f}MB -> {hbm_bytes(params)/1e6:.1f}MB "
           f"({args.packed or 'float'}"
-          + (f", backend={cim.backend}, domain={cim.domain}" if cim
-             else "") + ")")
+          + (f", backend={cim_decode.backend}, domain={cim_decode.domain}, "
+             f"fidelity={cim_decode.fidelity}" if cim else "") + ")")
 
     extra = {}
     if cfg.family == "audio":
@@ -126,11 +153,13 @@ def main(argv=None):
                              slots=args.slots or args.max_batch,
                              chunk=args.chunk, page_size=args.page_size,
                              num_pages=args.num_pages or None,
-                             cim=cim, extra_inputs=extra)
+                             cim=cim, extra_inputs=extra,
+                             scrub_every=args.scrub_every)
     elif args.continuous:
         eng = Scheduler(model, params, capacity=args.capacity,
                         slots=args.slots or args.max_batch,
-                        chunk=args.chunk, cim=cim, extra_inputs=extra)
+                        chunk=args.chunk, cim=cim, extra_inputs=extra,
+                        scrub_every=args.scrub_every)
     else:
         eng = ServeEngine(model, params, capacity=args.capacity,
                           max_batch=args.max_batch, cim=cim,
@@ -166,10 +195,16 @@ def main(argv=None):
         "tok_per_s": round(eng.generated_tokens / max(dt, 1e-9), 1),
         **latency_stats(done),
     }
+    if cim_decode is not None:
+        out["fidelity"] = cim_decode.fidelity
     if args.continuous:
         out.update(decode_loop="continuous", slots=eng.slots,
                    chunk=eng.chunk, chunks=eng.chunks_run,
                    slot_occupancy=round(eng.slot_occupancy, 3))
+        if cim_decode is not None and cim_decode.fidelity == "device":
+            out.update(scrubs=eng.scrubs_run,
+                       adc_clip_lo=eng.adc_clip_lo,
+                       adc_clip_hi=eng.adc_clip_hi)
         if args.kv == "paged":
             out.update(kv="paged", page_size=eng.page_size,
                        num_pages=eng.num_pages,

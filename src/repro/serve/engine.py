@@ -391,10 +391,20 @@ class _EngineBase:
         # backend/interpret pin against the kernel registry here, so an
         # incapable backend fails loudly now instead of mid-decode, and
         # every dense() under this engine hits the plan cache with a
-        # fully concrete request
-        self.cim = cim.resolve() if cim is not None else None
+        # fully concrete request.  Resolution is PER PHASE (noise-aware
+        # routing): a `fidelity='device'` request runs the fault-
+        # injected path only for decode — prefill routes back to an
+        # exact backend (a prefill upset corrupts the whole KV prefix;
+        # a decode upset perturbs one sampled token).  For exact
+        # requests both resolutions are identical, so the exact serving
+        # path is bitwise-unchanged.
+        if cim is not None:
+            self.cim = cim.resolve()
+            self.cim_prefill = cim.resolve(phase="prefill")
+        else:
+            self.cim = self.cim_prefill = None
         self.extra_inputs = extra_inputs or {}
-        self._prefill = make_prefill_step(model, capacity, self.cim)
+        self._prefill = make_prefill_step(model, capacity, self.cim_prefill)
         self.queue: list[Request] = []
         self.completed: list[Request] = []
         self.steps_run = 0
@@ -586,7 +596,7 @@ class Scheduler(_EngineBase):
     def __init__(self, model, params, capacity: int = 512, slots: int = 8,
                  chunk: int = 8, cim=None, extra_inputs=None,
                  spmd_axes=None, clock=time.monotonic,
-                 sleep=time.sleep):
+                 sleep=time.sleep, scrub_every: Optional[int] = 8):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         super().__init__(model, params, capacity, cim, extra_inputs)
@@ -594,6 +604,7 @@ class Scheduler(_EngineBase):
         self.chunk = chunk
         self._clock = clock
         self._sleep = sleep
+        self._init_fidelity(scrub_every)
         # control lanes shared by the dense and paged pools
         self.tok = jnp.zeros((slots,), jnp.int32)
         self.live = jnp.zeros((slots,), jnp.bool_)
@@ -615,6 +626,82 @@ class Scheduler(_EngineBase):
         self._admit_fn = make_admit_fn()
         # device-side pool: per-slot dense batch-1 states
         self.pool = init_slot_pool(model, self.slots, self.capacity)
+
+    # ------------------------------------------------- device fidelity
+    def _init_fidelity(self, scrub_every: Optional[int]) -> None:
+        """Graceful-degradation state for ``fidelity='device'`` serving:
+        pristine (TL-ReRAM) weights vs the SERVED weights, which drift
+        by the fault model's per-chunk disturb channel and are repaired
+        every ``scrub_every`` chunks by a restore-scrub — the paper's
+        DC-power-free restore as an online repair, bounding accumulated
+        error at the per-scrub restore yield instead of letting it
+        compound.  Exact-fidelity engines: all hooks are no-ops and the
+        serving path is bitwise-unchanged."""
+        self.scrub_every = scrub_every
+        self.scrubs_run = 0
+        self.adc_clip_lo = 0          # per-chunk ADC clip/saturation
+        self.adc_clip_hi = 0          # counters (device fidelity only)
+        self._fault_serving = (self.cim is not None
+                               and self.cim.mode == "ternary"
+                               and self.cim.fidelity == "device")
+        if not self._fault_serving:
+            return
+        from repro import faults
+        nt = self.cim.num_trits
+        fm = faults.get_fault_model()
+        self._fault_model = fm
+        self._params_pristine = self.params
+        self._drift_key = fm.key_for("serve-drift")
+        self._scrub_key = fm.key_for("serve-scrub")
+        self._probe_fn = jax.jit(lambda p: faults.adc_probe(
+            p, adc_bits=self.cim.adc_bits, num_trits=nt))
+        self._disturb_fn = jax.jit(lambda p, k: faults.disturb_packed_params(
+            p, fm.drift_rate, k, num_trits=nt))
+        # pristine tree passed as an ARGUMENT, not closed over: a jit
+        # constant would be constant-folded through the whole restore
+        # channel at compile time (minutes per weight leaf on CPU)
+        self._scrub_fn = jax.jit(lambda p, k: faults.scrub_packed_params(
+            p, fm.restore_yield, k, num_trits=nt))
+        # power-on restore: the served weights come up through ONE
+        # restore pass from the pristine ReRAM contents
+        self.params = self._scrub_fn(
+            self._params_pristine,
+            jax.random.fold_in(self._scrub_key, self.scrubs_run))
+
+    def _pre_chunk(self) -> None:
+        """Between-chunk drift: the disturb channel compounds on the
+        served weights (chunk-indexed key — deterministic campaign)."""
+        if self._fault_serving and self._fault_model.drift_rate > 0.0:
+            self.params = self._disturb_fn(
+                self.params,
+                jax.random.fold_in(self._drift_key, self.chunks_run))
+
+    def _round_extras(self) -> tuple:
+        """Device scalars appended to the round's SINGLE transfer (the
+        one-transfer-per-chunk contract must hold in device mode too):
+        the ADC clip/saturation probe over the served weights."""
+        if self._fault_serving:
+            return self._probe_fn(self.params)
+        return ()
+
+    def _absorb_round_extras(self, extras: tuple) -> None:
+        if extras:
+            lo, hi = extras
+            self.adc_clip_lo += int(lo)
+            self.adc_clip_hi += int(hi)
+
+    def _maybe_scrub(self) -> None:
+        """Periodic restore-scrub: every ``scrub_every`` chunks the
+        served weights are re-restored from the pristine tree (drift
+        discarded; residual error bounded by the restore yield).
+        ``scrub_every=None``/0 disables repair — the degradation
+        baseline the serve_fidelity bench measures against."""
+        if (self._fault_serving and self.scrub_every
+                and self.chunks_run % self.scrub_every == 0):
+            self.scrubs_run += 1
+            self.params = self._scrub_fn(
+                self._params_pristine,
+                jax.random.fold_in(self._scrub_key, self.scrubs_run))
 
     def kv_bytes(self) -> int:
         """Device bytes of the pool's KV leaves (codes + scales) — the
@@ -661,13 +748,17 @@ class Scheduler(_EngineBase):
 
     def _serve_round(self, elapsed) -> None:
         # one scheduling round: <= chunk decode steps on device, then
-        # ONE transfer carrying everything the host needs
+        # ONE transfer carrying everything the host needs — fidelity
+        # extras (ADC clip counters) ride the same transfer
         occupied = [i for i, r in enumerate(self._slot_req)
                     if r is not None]
+        self._pre_chunk()
         buf, cnt, steps, occ = self._run_chunk()
         self.fresh = jnp.zeros((self.slots,), jnp.bool_)
-        buf_h, cnt_h, live_h, steps_h, occ_h = self._device_get(
-            (buf, cnt, self.live, steps, occ))
+        out = self._device_get(
+            (buf, cnt, self.live, steps, occ) + self._round_extras())
+        buf_h, cnt_h, live_h, steps_h, occ_h = out[:5]
+        self._absorb_round_extras(out[5:])
         self.chunks_run += 1
         self.decode_steps += int(steps_h)
         self.steps_run += int(steps_h)
@@ -682,6 +773,7 @@ class Scheduler(_EngineBase):
                 req.latency_s = done_t - req.arrival_s
                 self.completed.append(req)
                 self._retire_slot(s)
+        self._maybe_scrub()
 
     def run(self) -> list[Request]:
         """Serve the whole queue continuously (the shared
@@ -749,7 +841,8 @@ class PagedScheduler(Scheduler):
                  slots: int = 8, chunk: int = 8, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  share_prefix: bool = True, cim=None, extra_inputs=None,
-                 spmd_axes=None, clock=time.monotonic, sleep=time.sleep):
+                 spmd_axes=None, clock=time.monotonic, sleep=time.sleep,
+                 scrub_every: Optional[int] = 8):
         if not model.supports_paged_kv:
             raise ValueError(
                 f"{type(model).__name__} (family "
@@ -767,7 +860,8 @@ class PagedScheduler(Scheduler):
             cim = dataclasses.replace(cim, kv_layout="paged")
         super().__init__(model, params, capacity=capacity, slots=slots,
                          chunk=chunk, cim=cim, extra_inputs=extra_inputs,
-                         spmd_axes=spmd_axes, clock=clock, sleep=sleep)
+                         spmd_axes=spmd_axes, clock=clock, sleep=sleep,
+                         scrub_every=scrub_every)
 
     def _init_pool(self, model, spmd_axes):
         from repro.models import paged_kv

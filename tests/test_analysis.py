@@ -309,6 +309,24 @@ def test_ra004_unseeded_rng_benchmarks_only(tmp_path):
     assert _lint(tmp_path, src, rel_path="src/x.py") == []
 
 
+def test_ra004_jax_key_seed_derivation(tmp_path):
+    src = """\
+        import jax
+        from benchmarks.common import stable_seed
+        def f(n):
+            bad = jax.random.key(100 + n)
+            bad2 = jax.random.PRNGKey(hash("x"))
+            ok = jax.random.key(42)
+            ok2 = jax.random.key(stable_seed("sweep", n))
+            return bad, bad2, ok, ok2
+        """
+    fs = _lint(tmp_path, src, rel_path="benchmarks/x.py")
+    assert [f.rule for f in fs] == ["RA004"] * 2
+    assert all("stable_seed" in f.message for f in fs)
+    # seed hygiene is a benchmarks-only contract
+    assert _lint(tmp_path, src, rel_path="src/x.py") == []
+
+
 def test_ra000_malformed_suppression(tmp_path):
     fs = _lint(tmp_path, "x = 1   # lint: allow everything\n")
     assert [f.rule for f in fs] == ["RA000"]

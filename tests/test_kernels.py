@@ -136,7 +136,8 @@ class TestExecutionPlanAPI:
         assert p.blocks is not None if p.backend == "pallas" else True
 
     def test_unknown_names_list_choices(self):
-        with pytest.raises(ValueError, match=r"registered: \['pallas'"):
+        with pytest.raises(ValueError,
+                           match=r"registered: \['device', 'pallas'"):
             plan_matmul((4, 64, 32), backend="cuda")
         with pytest.raises(ValueError, match=r"'float', 'int8'"):
             plan_matmul((4, 64, 32), domain="fp8")

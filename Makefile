@@ -5,7 +5,7 @@
 # reproducible regardless of the caller's environment.
 XLA_DEVICES ?= 8
 
-.PHONY: verify test test-fast ci analyze dryrun-smoke bench
+.PHONY: verify test test-fast ci analyze dryrun-smoke bench bench-compare
 
 verify: test
 
@@ -20,9 +20,9 @@ test-fast:
 	XLA_DEVICES=$(XLA_DEVICES) scripts/verify.sh -m "not slow"
 
 # the full CI pipeline locally: analysis gate + tier-1 suite + the
-# bench schema gate — exactly what .github/workflows/ci.yml runs (as
-# separate jobs)
-ci: analyze test bench
+# bench schema gate + the perf-regression gate — exactly what
+# .github/workflows/ci.yml runs (as separate jobs)
+ci: analyze test bench bench-compare
 
 # static contract checker + sanitizer (src/repro/analysis/README.md):
 # capability lattice vs the kernels README matrix, pallas block/index
@@ -41,6 +41,14 @@ analyze:
 bench:
 	XLA_FLAGS="--xla_force_host_platform_device_count=$(XLA_DEVICES)" \
 	    PYTHONPATH=src python -m benchmarks.run --fast
+
+# perf-regression gate: diff the regenerated (gitignored)
+# experiments/benchmarks/wallclock.json against the tracked
+# BENCH_wallclock.json baseline — every tok_per_s_* / step_time_s*
+# metric, semantic shape-cell keys, fail on >15% regression
+# (benchmarks/compare.py). Run `make bench` first.
+bench-compare:
+	PYTHONPATH=src python -m benchmarks.compare
 
 # one dry-run cell as a launcher smoke check (compiles a 256-chip train
 # step against ShapeDtypeStructs; no allocation)

@@ -1,0 +1,183 @@
+"""Perf-regression gate: regenerated wallclock vs the tracked baseline.
+
+``make bench`` regenerates ``experiments/benchmarks/wallclock.json``
+(the fast sweep); this module diffs every throughput/latency metric in
+it against the tracked repo-root ``BENCH_wallclock.json`` baseline and
+exits nonzero when any metric regressed by more than the threshold
+(default 15%) — the CI ``bench-compare`` step.
+
+Metric collection is recursive over the artifact tree: every numeric
+key starting with ``tok_per_s`` (higher is better) or ``step_time_s``
+(lower is better) becomes one comparison, addressed by its JSON path.
+List elements that are shape cells (dicts carrying phase/m/k/n/mode)
+are keyed SEMANTICALLY — ``shapes[decode:8x1024x1024:trit2]`` — not by
+index: the fast candidate sweep measures fewer cells than the full
+baseline, so positional keys would misalign the comparison.  Only the
+key intersection is compared (coverage differences are reported, not
+failed); near-zero baselines are skipped rather than divided by.
+
+Exit codes: 0 within threshold, 1 regression(s), 2 unusable inputs
+(missing/unparseable artifact, or no common metrics).
+
+    python -m benchmarks.compare                    # default paths
+    python -m benchmarks.compare --threshold 0.10
+    make bench-compare
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# paths derived locally (NOT via .common, which imports jax + the model
+# stack): the compare gate must run on artifacts alone
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_DIR = os.path.join(REPO_ROOT, "experiments", "benchmarks")
+
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_wallclock.json")
+DEFAULT_CANDIDATE = os.path.join(OUT_DIR, "wallclock.json")
+DEFAULT_THRESHOLD = 0.15
+
+# metric-name prefix -> True when higher is better
+METRIC_PREFIXES = {"tok_per_s": True, "step_time_s": False}
+
+# a list element carrying these keys is a shape cell, keyed by content
+SHAPE_CELL_KEYS = {"phase", "m", "k", "n", "mode"}
+
+
+def _element_key(item, index: int) -> str:
+    if isinstance(item, dict) and SHAPE_CELL_KEYS <= item.keys():
+        return (f"{item['phase']}:{item['m']}x{item['k']}x{item['n']}"
+                f":{item['mode']}")
+    return str(index)
+
+
+def collect_metrics(node, prefix: str = "") -> dict:
+    """JSON-path -> float for every gated metric under ``node``.
+
+    A dict may carry ``ungated_metrics``, a list of sibling keys the
+    artifact itself declares non-claims (e.g. the fused read's tok/s
+    under interpret emulation, where wallclock measures the emulator
+    and the artifact's ``fused_claim_basis`` is byte traffic); those
+    keys are skipped, so either side of the comparison can opt a
+    metric out (it drops from the key intersection)."""
+    out = {}
+    if isinstance(node, dict):
+        ungated = set(node.get("ungated_metrics") or ())
+        for k, v in node.items():
+            if k in ungated:
+                continue
+            path = f"{prefix}.{k}" if prefix else k
+            if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and any(k.startswith(p) for p in METRIC_PREFIXES):
+                out[path] = float(v)
+            else:
+                out.update(collect_metrics(v, path))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(collect_metrics(v, f"{prefix}[{_element_key(v, i)}]"))
+    return out
+
+
+def _higher_is_better(path: str) -> bool:
+    leaf = path.rsplit(".", 1)[-1]
+    for pfx, higher in METRIC_PREFIXES.items():
+        if leaf.startswith(pfx):
+            return higher
+    raise ValueError(f"metric path {path!r} matches no known prefix")
+
+
+def compare(baseline: dict, candidate: dict,
+            threshold: float = DEFAULT_THRESHOLD) -> dict:
+    """Diff the two artifacts' metrics.  Returns::
+
+        {"compared": [(path, base, cand, rel_change)],
+         "regressions": [...subset worse than threshold...],
+         "baseline_only": [...], "candidate_only": [...]}
+
+    ``rel_change`` is signed so that NEGATIVE is always worse (tok/s
+    drop, or step-time increase sign-flipped).
+    """
+    base = collect_metrics(baseline)
+    cand = collect_metrics(candidate)
+    common = sorted(base.keys() & cand.keys())
+    compared, regressions = [], []
+    for path in common:
+        b, c = base[path], cand[path]
+        if abs(b) < 1e-12:
+            continue                    # near-zero baseline: no ratio
+        rel = (c - b) / abs(b)
+        if not _higher_is_better(path):
+            rel = -rel
+        row = (path, b, c, rel)
+        compared.append(row)
+        if rel < -threshold:
+            regressions.append(row)
+    return {
+        "compared": compared,
+        "regressions": regressions,
+        "baseline_only": sorted(base.keys() - cand.keys()),
+        "candidate_only": sorted(cand.keys() - base.keys()),
+    }
+
+
+def _load(path: str):
+    if not os.path.exists(path):
+        return None, f"missing artifact: {path}"
+    try:
+        with open(path) as f:
+            return json.load(f), None
+    except ValueError as e:
+        return None, f"unparseable artifact {path}: {e}"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--baseline", default=DEFAULT_BASELINE,
+                   help="tracked baseline artifact (default: "
+                        "BENCH_wallclock.json)")
+    p.add_argument("--candidate", default=DEFAULT_CANDIDATE,
+                   help="regenerated artifact (default: experiments/"
+                        "benchmarks/wallclock.json)")
+    p.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                   help="max tolerated relative regression "
+                        "(default 0.15 = 15%%)")
+    args = p.parse_args(argv)
+
+    baseline, err = _load(args.baseline)
+    if err:
+        print(f"bench-compare: {err}", file=sys.stderr)
+        return 2
+    candidate, err = _load(args.candidate)
+    if err:
+        print(f"bench-compare: {err}", file=sys.stderr)
+        return 2
+
+    result = compare(baseline, candidate, threshold=args.threshold)
+    if not result["compared"]:
+        print("bench-compare: no common metrics between the artifacts",
+              file=sys.stderr)
+        return 2
+
+    print(f"bench-compare: {len(result['compared'])} metrics, "
+          f"threshold {args.threshold:.0%}")
+    for path, b, c, rel in result["compared"]:
+        flag = " !! REGRESSION" if rel < -args.threshold else ""
+        print(f"  {path}: {b:g} -> {c:g} ({rel:+.1%}){flag}")
+    for side in ("baseline_only", "candidate_only"):
+        if result[side]:
+            print(f"  ({side.replace('_', '-')}: "
+                  f"{', '.join(result[side])})")
+    if result["regressions"]:
+        print(f"FAIL: {len(result['regressions'])} metric(s) regressed "
+              f"more than {args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print("OK: within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

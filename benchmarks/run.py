@@ -7,7 +7,9 @@ experiments/benchmarks/summary.json.
 
 ``--fast`` runs only the perf-trajectory suites (kernel_bench +
 wallclock, reduced sweeps) and then asserts the tracked JSON artifacts
-exist and are schema-valid — the `make bench` CI contract.
+exist, are schema-valid, AND carry no ``claim_*`` key holding false
+anywhere in the tree (a committed artifact asserting a failed claim
+fails the gate) — the `make bench` CI contract.
 """
 from __future__ import annotations
 
@@ -50,15 +52,43 @@ FAST_SUITES = [
 # BENCH_/.json filename inside schema.validate_file)
 FAST_ARTIFACTS = [
     os.path.join(REPO_ROOT, "BENCH_wallclock.json"),
+    os.path.join(REPO_ROOT, "BENCH_autotune.json"),
     os.path.join(OUT_DIR, "wallclock.json"),
     os.path.join(OUT_DIR, "kernel_bench.json"),
 ]
 
 
+def _false_claims(node, prefix: str = "") -> list[str]:
+    """Recursively collect ``claim_*`` keys holding False anywhere in a
+    (parsed) artifact — a committed artifact asserting a failed claim
+    must fail the gate, not just the suite run that produced it."""
+    bad = []
+    if isinstance(node, dict):
+        for k, v in node.items():
+            where = f"{prefix}.{k}" if prefix else k
+            if k.startswith("claim_") and v is False:
+                bad.append(where)
+            else:
+                bad.extend(_false_claims(v, where))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            bad.extend(_false_claims(v, f"{prefix}[{i}]"))
+    return bad
+
+
 def check_artifacts() -> list[str]:
+    import json
     errors = []
     for path in FAST_ARTIFACTS:
         errors.extend(schema.validate_file(path))
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+            except ValueError:
+                continue           # unparseable: already reported above
+            errors.extend(f"{path}: {where} is false"
+                          for where in _false_claims(payload))
     return errors
 
 

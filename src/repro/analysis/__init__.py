@@ -1,7 +1,7 @@
 """Static contract checker + sanitizer for plans, kernels, and serve
 loops (`python -m repro.analysis`, `make analyze`).
 
-Four passes, each a ``run() -> list[Finding]``:
+Five passes, each a ``run() -> list[Finding]``:
 
   * ``capability`` — the (op x backend x domain x packing x kv_layout
     x platform) lattice from the live kernel registry: declared cells
@@ -10,6 +10,11 @@ Four passes, each a ``run() -> list[Finding]``:
   * ``blockmap`` — ``select_block_shapes`` outputs over a shape sweep:
     alignment, exact grid coverage, in-bounds index maps, VMEM budget,
     and the padded-region masking identities.
+  * ``autotune`` — the measured block-shape table
+    (``BENCH_autotune.json``): structure, the same alignment/VMEM
+    invariants, duplicate cells, current-platform sweep coverage, and
+    canonical serialization.  The runtime loader degrades quietly to
+    the heuristic; this pass is where a doctored table fails loudly.
   * ``sanitize`` — the serve transfer/retrace contract: exactly one
     device->host transfer per chunk, zero retraces after warmup, on
     both ``Scheduler`` and ``PagedScheduler``.  The :func:`sanitize`
@@ -23,18 +28,20 @@ Rule catalog and suppression syntax: src/repro/analysis/README.md.
 from .base import Finding, rel  # noqa: F401
 from .sanitizer import (SanitizeError, SanitizeReport,  # noqa: F401
                         sanitize)
-from . import blockmap, capability, lint, sanitizer  # noqa: F401
+from . import (autotune_table, blockmap, capability, lint,  # noqa: F401
+               sanitizer)
 
 # CLI/run order: cheap static passes first, the model-building
 # sanitizer last
 PASSES = (("capability", capability.run),
           ("blockmap", blockmap.run),
+          ("autotune", autotune_table.run),
           ("lint", lint.run),
           ("sanitize", sanitizer.run))
 
 
 def run_all() -> list:
-    """All four passes with default settings; the aggregate findings."""
+    """Every pass with default settings; the aggregate findings."""
     findings = []
     for _, fn in PASSES:
         findings.extend(fn())

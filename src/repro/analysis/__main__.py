@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import PASSES, blockmap, capability, lint, sanitizer
+from . import PASSES, autotune_table, blockmap, capability, lint, sanitizer
 
 
 def main(argv=None) -> int:
@@ -19,8 +19,8 @@ def main(argv=None) -> int:
         description="static contract checker + sanitizer "
                     "(src/repro/analysis/README.md)")
     p.add_argument("--passes", default=None,
-                   help="comma-separated subset to run "
-                        "(capability,blockmap,lint,sanitize); default all")
+                   help="comma-separated subset to run (capability,"
+                        "blockmap,autotune,lint,sanitize); default all")
     p.add_argument("--list", action="store_true",
                    help="list passes and exit")
     p.add_argument("--emit-matrix", action="store_true",
@@ -30,6 +30,9 @@ def main(argv=None) -> int:
     p.add_argument("--readme", default=None, metavar="PATH",
                    help="capability pass: check this README instead of "
                         "src/repro/kernels/README.md")
+    p.add_argument("--autotune-table", default=None, metavar="PATH",
+                   help="autotune pass: check this table instead of "
+                        "BENCH_autotune.json (violation injection)")
     p.add_argument("--pin-blocks", default=None, metavar="BM,BN,BK",
                    help="blockmap pass: force these block shapes over "
                         "the sweep instead of select_block_shapes "
@@ -73,6 +76,8 @@ def main(argv=None) -> int:
     runners = {
         "capability": lambda: capability.run(readme_path=args.readme),
         "blockmap": lambda: blockmap.run(pin_blocks=pin_blocks),
+        "autotune": lambda: autotune_table.run(
+            table_path=args.autotune_table),
         "lint": lambda: lint.run(
             paths=([s.strip() for s in args.lint_paths.split(",")]
                    if args.lint_paths else None),

@@ -1,0 +1,99 @@
+"""Pass — autotune-table checker.
+
+The measured block-shape table (``BENCH_autotune.json``, written by
+``python -m repro.kernels.autotune``) is consulted by plan resolution:
+a warm hit puts *measured* tiles into every pallas plan the serve path
+executes.  The runtime loader is deliberately lenient — a doctored or
+stale table degrades to the ``select_block_shapes`` heuristic with a
+warning, because a serving box must keep serving.  THIS pass is the
+loud half of that split: ``make analyze`` fails on any table the
+runtime would have quietly rejected or under-used.
+
+Checks (rule catalog in this package's README):
+
+  * AT001/AT002/AT003 — ``kernels.autotune.validate_table``: structure
+    and enum membership, the alignment + VMEM invariants the pallas
+    kernels' correctness rests on, duplicate cell keys.
+  * AT004 — presence + coverage: the table exists and covers every
+    ``(shape, phase, packing, domain)`` cell of the tuning sweep for
+    the *current* platform (a stale table silently starves plan
+    resolution back onto the heuristic — visible in logs, fatal here).
+  * AT005 — canonical serialization: the file is byte-identical to
+    ``canonical_bytes`` of its own entries (hand-edits that reorder or
+    reformat break the deterministic round trip the persistence tests
+    pin).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from .base import Finding, REPO_ROOT, rel
+
+PASS = "autotune"
+
+
+def _sweep_cells(platform: str) -> list:
+    from repro.kernels import autotune
+    from repro.kernels.plan import DOMAINS, PACKINGS
+    cells = []
+    for shapes, phase in ((autotune.DECODE_SHAPES, "decode"),
+                          (autotune.PREFILL_SHAPES, "prefill")):
+        for (m, k, n) in shapes:
+            for packing in PACKINGS:
+                for domain in DOMAINS:
+                    cells.append(autotune.cell_key(
+                        m, k, n, phase, platform, packing, domain))
+    return cells
+
+
+def run(table_path: Optional[str] = None) -> list:
+    """Check the tracked autotune table (or an injected one); returns
+    findings (empty = clean).  ``table_path`` exists for violation
+    injection in tests — the default is the tracked repo-root artifact,
+    NOT ``$REPRO_AUTOTUNE_TABLE``: analyze gates what the repo ships,
+    a test fixture pointing the env var elsewhere must not mask it.
+    """
+    from repro.kernels import autotune
+    path = table_path or os.path.join(REPO_ROOT,
+                                      autotune.DEFAULT_TABLE_BASENAME)
+    where = rel(path)
+    if not os.path.exists(path):
+        return [Finding(PASS, "AT004", where,
+                        "autotune table is missing; regenerate with "
+                        "`python -m repro.kernels.autotune`")]
+    try:
+        with open(path) as f:
+            text = f.read()
+        payload = json.loads(text)
+    except (OSError, ValueError) as e:
+        return [Finding(PASS, "AT001", where,
+                        f"table is not readable JSON: {e}")]
+    findings = [Finding(PASS, rule, f"{where} {cell}", message)
+                for rule, cell, message in autotune.validate_table(payload)]
+    if findings:
+        return findings            # coverage/canonical checks would
+                                   # only echo the structural damage
+    entries = payload["entries"]
+    have = {autotune.cell_key(e["m"], e["k"], e["n"], e["phase"],
+                              e["platform"], e["packing"], e["domain"])
+            for e in entries}
+    import jax
+    platform = jax.default_backend()
+    missing = [c for c in _sweep_cells(platform) if c not in have]
+    for m, k, n, phase, plat, packing, domain in missing:
+        findings.append(Finding(
+            PASS, "AT004", where,
+            f"stale table: sweep cell ({m},{k},{n}) {phase} "
+            f"{packing}/{domain} has no measurement for the current "
+            f"platform {plat!r}; regenerate with "
+            f"`python -m repro.kernels.autotune`"))
+    if text != autotune.canonical_bytes(entries):
+        findings.append(Finding(
+            PASS, "AT005", where,
+            "table is not in canonical serialization (sorted cells, "
+            "sorted keys, 2-space indent, trailing newline) — "
+            "hand-edited?  `python -m repro.kernels.autotune` rewrites "
+            "canonically"))
+    return findings

@@ -68,6 +68,10 @@ def _eval_operands(op: str, packing: str, shape):
     import jax.numpy as jnp
     from repro.kernels.ops import PackedTernary, TRIT2_PER_BYTE
     m, k, n = shape
+    if op == "attention":
+        # no packed weight: the operand is the raw page-pool view
+        from repro.kernels import paged_attention
+        return paged_attention.eval_operands(shape)
     x = jax.ShapeDtypeStruct((m, k), jnp.float32)
     if op == "cim":
         # float weights: ternarized on the fly by the runner, valid
@@ -118,6 +122,18 @@ def _check_declared_cell(name, op, domain, packing, kv_layout, fidelity,
                        f"declared-capable cell failed abstract eval "
                        f"through execute: {e!r}")
     import jax.numpy as jnp
+    if op == "attention":
+        # contract: partial flash statistics (acc, m, l), all f32
+        from repro.kernels import paged_attention
+        want = paged_attention.eval_output(EVAL_SHAPE)
+        got = tuple(tuple(o.shape) for o in out)
+        if (got != want
+                or any(o.dtype != jnp.float32 for o in out)):
+            return Finding(PASS, "CAP002", cell,
+                           f"abstract eval produced {got} "
+                           f"{[str(o.dtype) for o in out]}, expected "
+                           f"{want} float32 (acc, m, l)")
+        return None
     if tuple(out.shape) != (m, n) or out.dtype != jnp.float32:
         return Finding(PASS, "CAP002", cell,
                        f"abstract eval produced {out.shape} {out.dtype}, "

@@ -155,6 +155,39 @@ register_backend(BackendSpec(
     fidelities=_EXACT,
 ))
 
+# ----------------------------------------------------- paged attention
+# The layout-specialized executors the comment above reserved: the fused
+# paged-attention Pallas kernel consumes the page table in-kernel (no
+# gathered dense copy), its gather-based XLA oracle materializes one.
+# Both are float-KV only (int8 pools carry scale pages the fused read
+# does not consume yet) and packing-agnostic — attention has no packed
+# weight operand, so every packing mode a model runs under is admissible.
+from . import paged_attention as _paged_attention  # noqa: E402
+
+register_backend(BackendSpec(
+    name="paged_attn",
+    ops=frozenset({"attention"}),
+    domains=frozenset({"float"}),
+    packings=frozenset({"base3", "trit2"}),
+    platforms=frozenset({"cpu", "tpu"}),     # cpu = interpret mode
+    priority=100,
+    runner=_paged_attention.run_pallas,
+    kv_layouts=frozenset({"paged"}),
+    fidelities=_EXACT,
+))
+
+register_backend(BackendSpec(
+    name="paged_attn_ref",
+    ops=frozenset({"attention"}),
+    domains=frozenset({"float"}),
+    packings=frozenset({"base3", "trit2"}),
+    platforms=frozenset({"cpu", "gpu", "tpu"}),
+    priority=10,
+    runner=_paged_attention.run_gather,
+    kv_layouts=frozenset({"paged"}),
+    fidelities=_EXACT,
+))
+
 # The device-fidelity backend (fault-injected analog MAC: sampled
 # conductances + ADC transfer over a seeded FaultModel) registers from
 # repro.faults.backend — imported last so the built-in registrations

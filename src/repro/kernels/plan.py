@@ -32,7 +32,7 @@ import dataclasses
 import functools
 from typing import Any, Callable, Optional
 
-OPS = ("ternary", "cim")
+OPS = ("ternary", "cim", "attention")
 DOMAINS = ("float", "int8")
 PACKINGS = ("base3", "trit2")
 PHASES = ("auto", "decode", "prefill")
@@ -80,7 +80,7 @@ class ExecutionPlan:
     under a ``device`` request.  ``adc_bits`` / ``num_trits`` are set
     for the macro-exact ``cim`` op and for device-fidelity plans.
     """
-    op: str                                  # ternary | cim
+    op: str                                  # ternary | cim | attention
     backend: str                             # resolved name (never 'auto')
     domain: str                              # float | int8
     packing: str                             # base3 | trit2
@@ -94,6 +94,7 @@ class ExecutionPlan:
     adc_bits: Optional[int] = None           # cim op / device fidelity
     num_trits: Optional[int] = None          # cim op / device fidelity
     fidelity: str = "exact"                  # exact | device (post-routing)
+    block_source: str = "heuristic"          # heuristic | autotune | pinned
 
     @property
     def shape(self) -> tuple:
@@ -106,7 +107,8 @@ class ExecutionPlan:
                 "blocks": list(self.blocks) if self.blocks else None,
                 "interpret": self.interpret,
                 "kv_layout": self.kv_layout,
-                "fidelity": self.fidelity}
+                "fidelity": self.fidelity,
+                "block_source": self.block_source}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,23 +279,35 @@ def _resolve(op, m, k, n, phase, backend, domain, packing, interpret,
     if interpret is None:
         interpret = default_interpret(platform)
     blocks = None
+    block_source = "heuristic"
     if spec.needs_blocks:
         if op == "cim":
             dm, dn, dk = CIM_DEFAULT_BLOCKS
         else:
-            from .ternary_matmul import (TRIT2_PER_BYTE,
-                                         select_block_shapes)
-            # the kernel pads trit2 K to a byte multiple before tiling;
-            # select against the extent it will actually see
-            kdim = k + (-k % TRIT2_PER_BYTE) if packing == "trit2" else k
-            dm, dn, dk = select_block_shapes(m, kdim, n, packing,
-                                             domain=domain)
+            from . import autotune
+            tuned = autotune.lookup_blocks(m, k, n, phase, platform,
+                                           packing, domain)
+            if tuned is not None:
+                dm, dn, dk = tuned
+                block_source = "autotune"
+            else:
+                from .ternary_matmul import (TRIT2_PER_BYTE,
+                                             select_block_shapes)
+                # the kernel pads trit2 K to a byte multiple before
+                # tiling; select against the extent it will actually see
+                kdim = (k + (-k % TRIT2_PER_BYTE) if packing == "trit2"
+                        else k)
+                dm, dn, dk = select_block_shapes(m, kdim, n, packing,
+                                                 domain=domain)
+        if bm or bn or bk:
+            block_source = "pinned"
         blocks = (bm or dm, bn or dn, bk or dk)
     return ExecutionPlan(op=op, backend=spec.name, domain=domain,
                          packing=packing, m=m, k=k, n=n, phase=phase,
                          blocks=blocks, interpret=bool(interpret),
                          kv_layout=kv_layout, adc_bits=adc_bits,
-                         num_trits=num_trits, fidelity=fidelity)
+                         num_trits=num_trits, fidelity=fidelity,
+                         block_source=block_source)
 
 
 def plan_matmul(shape, phase: str = "auto", cfg: Any = None, *,

@@ -316,6 +316,49 @@ def decode_attention_read(x, w, cfg: ModelConfig, cache: KVCache,
             k.astype(cache.k.dtype), v.astype(cache.v.dtype))
 
 
+def paged_decode_attention_read(x, w, cfg: ModelConfig, k_pages, v_pages,
+                                page_table, pos, plan, cim_cfg=None):
+    """Batched one-token decode read straight off one layer's page pool:
+    the planned ``attention`` executor (``kernels.paged_attention``)
+    consumes the page table in-kernel, so the gathered dense KV copy the
+    ``slot_view`` path materializes never exists here.  The executor
+    returns partial flash statistics over the pooled context; the fresh
+    token's own k/v merge in with the same two-block rule (and the same
+    masking constant) as ``decode_attention_read``, so the two paths
+    agree to f32 round-off — and bitwise at the sampled argmax.
+
+    ``x`` is (S, 1, d) — all S slots at once, not vmapped: the executor
+    runs one grid over every (slot, page) cell.  Returns
+    (out (S, 1, d), k_new (S, KV, hd), v_new)."""
+    from repro.kernels import execute
+    from repro.kernels.paged_attention import PagedAttentionKV
+    s_dim, s1, _ = x.shape
+    assert s1 == 1, "paged decode read is single-token"
+    q, k, v = _project_qkv(x, w, cfg, positions=pos[:, None],
+                           cim_cfg=cim_cfg)
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    rep = h // kvh
+    qg = (q / jnp.sqrt(jnp.asarray(hd, q.dtype))).reshape(
+        s_dim, kvh, rep, hd)
+    acc_c, m_c, l_c = execute(
+        plan, qg, PagedAttentionKV(k_pages, v_pages, page_table, pos))
+    # new-token block, then the flash two-block merge (the dense decode
+    # read's rule verbatim): slots with no live context come back with
+    # m_c = -1e30, l_c = 0 and renormalize onto the fresh token alone
+    s_n = jnp.einsum("skrd,skd->skr", qg, k[:, 0].astype(qg.dtype),
+                     preferred_element_type=jnp.float32)
+    v_n = v.astype(jnp.float32)[:, 0]                     # (S, KV, hd)
+    m = jnp.maximum(m_c, s_n)
+    w_c = jnp.exp(m_c - m)
+    w_n = jnp.exp(s_n - m)
+    acc = acc_c * w_c[..., None] + w_n[..., None] * v_n[:, :, None, :]
+    l = l_c * w_c + w_n
+    out = (acc / l[..., None]).astype(q.dtype)            # (S,KV,rep,hd)
+    out = out.reshape(s_dim, 1, h * hd)
+    return (dense(out, w["wo"], cim_cfg, x_axes=ATTN_OUT),
+            k[:, 0], v[:, 0])
+
+
 def decode_attention(x, w, cfg: ModelConfig, cache: KVCache,
                      cim_cfg=None) -> tuple[jax.Array, KVCache]:
     """One-token decode against the cache (full or rolling window)."""

@@ -130,6 +130,22 @@ def slot_view(pool: PagedKVCache, page_table: jax.Array,
     return view
 
 
+def raw_pool_view(pool: PagedKVCache) -> tuple:
+    """The raw ``(L, P, page_size, KV, hd)`` page arrays, for
+    layout-specialized executors that consume the page table in-kernel
+    (``kernels.paged_attention``) instead of gathering a dense copy.
+
+    Float-KV pools only: int8 pools carry per-position scale pages the
+    fused read path does not consume — callers (PagedScheduler) fall
+    back to the :func:`slot_view` gather there."""
+    if pool.k_scale_pages is not None:
+        raise ValueError(
+            "raw pool view is float-KV only: int8 page pools carry "
+            "scale pages the fused attention read does not consume; "
+            "use the slot_view gather path")
+    return pool.k_pages, pool.v_pages
+
+
 def append_tokens(pool: PagedKVCache, kts: jax.Array, vts: jax.Array,
                   page_table: jax.Array, pos: jax.Array,
                   live: jax.Array) -> PagedKVCache:

@@ -114,6 +114,19 @@ class BaseModel:
             f"{type(self).__name__} (family {self.cfg.family!r}); "
             f"serve it from the dense slot pool")
 
+    def decode_paged_fused(self, params, tokens, pool, page_table, pos,
+                           cim=None, attn_plan=None):
+        """Batched one-token decode consuming the page pool in place
+        through a planned ``op='attention'`` executor — no gathered
+        dense copy.  Same read-only contract as :meth:`decode_paged`,
+        but over ALL slots at once: ``tokens (S,)``, ``page_table
+        (S, W)``, ``pos (S,)``; returns (logits (S, 1, V), kts
+        (L, S, KV, hd), vts)."""
+        raise NotImplementedError(
+            f"fused paged decode is not implemented for "
+            f"{type(self).__name__} (family {self.cfg.family!r}); "
+            f"serve it through the slot_view gather path")
+
     # --- common -------------------------------------------------------
     def init(self, key: jax.Array, dtype=None):
         return init_params(key, self.param_defs, dtype or self.cfg.dtype)
@@ -406,6 +419,43 @@ class TransformerLM(BaseModel):
         view = paged_kv.slot_view(pool, page_table, pos)
         x = _take_embed(params["embed"], token).astype(cfg.dtype)
         x, kts, vts = self._decode_read_scan(params, x, view, cim)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return dense(x, params["unembed"], cim), kts, vts
+
+    def decode_paged_fused(self, params, tokens, pool, page_table, pos,
+                           cim=None, attn_plan=None):
+        """Batched one-token decode straight off the page pool: the
+        layer scan carries each layer's raw page arrays and the planned
+        attention executor (``attn_plan``, an ``op='attention'``
+        ExecutionPlan) reads them through the page table in-kernel —
+        the ``slot_view`` gather copy is never materialized.  Returns
+        (logits (S, 1, V), kts (L, S, KV, hd), vts) in compute dtype;
+        the scheduler's page scatter is unchanged."""
+        if not self.supports_paged_kv:
+            return super().decode_paged_fused(params, tokens, pool,
+                                              page_table, pos, cim,
+                                              attn_plan)
+        if attn_plan is None:
+            raise ValueError("decode_paged_fused needs a resolved "
+                             "attention plan (PagedScheduler resolves "
+                             "one per pool geometry)")
+        from . import paged_kv
+        cfg = self.cfg
+        k_pages, v_pages = paged_kv.raw_pool_view(pool)
+        x = _take_embed(params["embed"], tokens[:, None]).astype(cfg.dtype)
+
+        def body(x, inp):
+            wl, k_l, v_l = inp
+            xa = rms_norm(x, wl["ln1"], cfg.norm_eps)
+            out, kt, vt = attn.paged_decode_attention_read(
+                xa, wl, cfg, k_l, v_l, page_table, pos, attn_plan, cim)
+            x = x + out
+            m, _ = self._mlp(rms_norm(x, wl["ln2"], cfg.norm_eps), wl,
+                             cim)
+            return x + m, (kt, vt)
+
+        x, (kts, vts) = jax.lax.scan(body, x, (params["blocks"],
+                                               k_pages, v_pages))
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         return dense(x, params["unembed"], cim), kts, vts
 

@@ -59,12 +59,15 @@ decode of that request, and greedy tokens are batch-shape independent.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_LOG = logging.getLogger("repro.serve.engine")
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:
@@ -242,7 +245,8 @@ def make_admit_fn() -> Callable:
 # paged KV: chunked decode over the page pool
 # =====================================================================
 
-def make_paged_decode_loop(model, chunk: int, cim=None, spmd_axes=None):
+def make_paged_decode_loop(model, chunk: int, cim=None, spmd_axes=None,
+                           attn_plan=None):
     """``make_chunked_decode_loop`` over the paged KV block pool
     (models/paged_kv.py): same chunk semantics, live-mask, budgets and
     ONE device->host transfer per chunk, but the per-slot cache is a
@@ -265,18 +269,37 @@ def make_paged_decode_loop(model, chunk: int, cim=None, spmd_axes=None):
     loop state.  Tokens are bitwise identical to the dense pool: the
     gathered view feeds the same read graph, and masked page garbage
     contributes exactly zero (see models/paged_kv.py).
+
+    With ``attn_plan`` (a resolved ``op='attention'`` ExecutionPlan,
+    PagedScheduler resolves one per pool geometry) the read path is
+    ``model.decode_paged_fused`` instead: one batched call whose
+    planned executor consumes the page table in-kernel — the gathered
+    dense KV copy the vmapped ``slot_view`` path materializes per slot
+    per step never exists.  Token outputs stay bitwise identical at the
+    argmax (tests/test_paged.py pins fused == gather == dense).
     """
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
     from repro.models import paged_kv
 
-    def read_one(params, pool, tok, pt_row, pos):
-        logits, kt, vt = model.decode_paged(params, tok[None, None], pool,
-                                            pt_row, pos, cim=cim)
-        return greedy_sample(logits)[0], kt[:, 0, 0], vt[:, 0, 0]
+    if attn_plan is not None:
+        def vread(params, pool, tok, page_table, pos):
+            logits, kts, vts = model.decode_paged_fused(
+                params, tok, pool, page_table, pos, cim=cim,
+                attn_plan=attn_plan)
+            # logits (S, 1, V) -> (S,); kts (L, S, KV, hd) ->
+            # (S, L, KV, hd), the append_tokens scatter layout
+            return (greedy_sample(logits), jnp.moveaxis(kts, 0, 1),
+                    jnp.moveaxis(vts, 0, 1))
+    else:
+        def read_one(params, pool, tok, pt_row, pos):
+            logits, kt, vt = model.decode_paged(params, tok[None, None],
+                                                pool, pt_row, pos,
+                                                cim=cim)
+            return greedy_sample(logits)[0], kt[:, 0, 0], vt[:, 0, 0]
 
-    vread = jax.vmap(read_one, in_axes=(None, None, 0, 0, 0),
-                     spmd_axis_name=spmd_axes)
+        vread = jax.vmap(read_one, in_axes=(None, None, 0, 0, 0),
+                         spmd_axis_name=spmd_axes)
 
     def chunk_step(params, tok, pool, page_table, pos, live, made, fresh,
                    max_new_row, eos_row):
@@ -835,6 +858,20 @@ class PagedScheduler(Scheduler):
     equivalent (``slots * capacity / page_size``) — pass a smaller pool
     to cap resident KV below the dense baseline (admission then defers
     under overload instead of over-allocating).
+
+    ``fused_attn`` selects the decode read path: ``'auto'`` (default)
+    resolves a fused ``op='attention'`` plan — the Pallas executor that
+    consumes the page table in-kernel, no gathered dense copy — and
+    falls back to the ``slot_view`` gather path (logged, never silent)
+    when the fused read would not help or hold: no capable backend for
+    this pool (int8-KV scale pages, spmd-sharded pools), an
+    interpret-mode-only platform (the emulation is slower than the
+    gather path's native lowering), or a MoE config (top-k routing
+    amplifies the kernel's f32 reassociation into token divergence —
+    the bitwise contract needs the gather graph).  ``True`` requires
+    the fused path (raises when no backend is capable; overrides the
+    interpret/MoE preferences); ``False`` pins the gather path.  Token
+    outputs are bitwise identical on every path 'auto' selects.
     """
 
     def __init__(self, model, params, capacity: int = 512,
@@ -842,7 +879,7 @@ class PagedScheduler(Scheduler):
                  num_pages: Optional[int] = None,
                  share_prefix: bool = True, cim=None, extra_inputs=None,
                  spmd_axes=None, clock=time.monotonic, sleep=time.sleep,
-                 scrub_every: Optional[int] = 8):
+                 scrub_every: Optional[int] = 8, fused_attn="auto"):
         if not model.supports_paged_kv:
             raise ValueError(
                 f"{type(model).__name__} (family "
@@ -856,6 +893,7 @@ class PagedScheduler(Scheduler):
         self.num_pages = (1 + slots * self.pages_per_slot
                           if num_pages is None else num_pages)
         self.share_prefix = share_prefix
+        self.fused_attn = fused_attn
         if cim is not None:
             cim = dataclasses.replace(cim, kv_layout="paged")
         super().__init__(model, params, capacity=capacity, slots=slots,
@@ -863,11 +901,70 @@ class PagedScheduler(Scheduler):
                          spmd_axes=spmd_axes, clock=clock, sleep=sleep,
                          scrub_every=scrub_every)
 
+    def _resolve_attn_plan(self, model, spmd_axes):
+        """Resolve the fused-attention ExecutionPlan for this pool
+        geometry through the capability registry (never kwargs), or
+        None for the gather path.  The plan shape is the attention
+        problem the chunk loop runs every step: all slots' grouped
+        queries (``S*KV*rep`` rows) of head dim ``hd`` against the
+        per-slot page capacity ``W*page_size``."""
+        if not self.fused_attn:
+            return None
+        from repro.kernels import plan_matmul
+        cfg = model.cfg
+        why = None
+        if spmd_axes is not None:
+            # the fused kernel carries no sharding annotations yet; the
+            # vmapped gather path keeps its spmd_axis_name contract
+            why = "spmd-sharded slot pool"
+        elif cfg.kv_cache_dtype == "int8":
+            why = "int8 KV pool (scale pages the fused read does not " \
+                  "consume)"
+        elif cfg.num_experts and self.fused_attn != True:  # noqa: E712
+            # MoE top-k expert routing is discontinuous: the fused
+            # read's per-page summation order differs from the gather
+            # graph by f32 round-off, and a router near-tie amplifies
+            # that into different experts — different tokens.  The
+            # scheduler's contract is bitwise parity with the dense
+            # pool, so 'auto' keeps the identical gather graph here;
+            # fused_attn=True overrides (correct, but only
+            # round-off-equal).
+            why = "MoE routing (top-k amplifies f32 round-off; " \
+                  "bitwise token parity needs the gather graph)"
+        else:
+            shape = (self.slots * cfg.num_heads, cfg.hd,
+                     self.pages_per_slot * self.page_size)
+            try:
+                plan = plan_matmul(shape, "decode", op="attention",
+                                   domain="float", kv_layout="paged")
+            except ValueError as e:
+                plan, why = None, str(e)
+            if plan is not None:
+                if not plan.interpret or self.fused_attn is True:
+                    return plan
+                # interpret mode is a correctness emulation, not the
+                # kernel: it is slower than the gather path's native
+                # XLA lowering, so 'auto' serves wallclock through the
+                # gather graph on hosts without a real lowering.  The
+                # parity tests and the bench force fused_attn=True.
+                why = "interpret-mode emulation on this platform " \
+                      "(slower than the gather path's native lowering)"
+        if self.fused_attn is True:
+            raise ValueError(
+                f"fused_attn=True but the fused paged-attention read "
+                f"is unavailable: {why}")
+        _LOG.info("PagedScheduler: fused paged-attention read "
+                  "unavailable (%s); serving through the slot_view "
+                  "gather path", why)
+        return None
+
     def _init_pool(self, model, spmd_axes):
         from repro.models import paged_kv
         self._paged_kv = paged_kv
+        self.attn_plan = self._resolve_attn_plan(model, spmd_axes)
         self._chunk_fn = make_paged_decode_loop(model, self.chunk,
-                                                self.cim, spmd_axes)
+                                                self.cim, spmd_axes,
+                                                attn_plan=self.attn_plan)
         self._admit_fn = make_paged_admit_fn()
         self._write_pages = jax.jit(paged_kv.write_prompt_pages,
                                     donate_argnums=(0,))

@@ -1,0 +1,222 @@
+"""Measured block-shape autotuner (ISSUE 8): persistence determinism,
+plan-resolution integration, and the loud analysis gate.
+
+  * canonical round trip: save -> load -> save is byte-identical, and
+    entry order cannot change the bytes;
+  * cold miss -> ``select_block_shapes`` fallback, recorded as
+    ``block_source='heuristic'`` in ``ExecutionPlan.describe()`` and
+    logged once per cell (never silent);
+  * warm hit -> the TABLE's blocks land in the plan,
+    ``block_source='autotune'``; explicit bm/bn/bk kwargs still win
+    (``block_source='pinned'``);
+  * a doctored table fails loudly in the analysis pass (`make
+    analyze`, AT001/AT002/AT003/AT005) and in the bench schema gate,
+    while the RUNTIME loader degrades to the heuristic with a warning
+    — a serving box keeps serving;
+  * the tracked repo-root BENCH_autotune.json is valid, canonical, and
+    actually consulted by plan resolution for its sweep cells.
+"""
+import json
+import logging
+import os
+
+import pytest
+
+from repro.kernels import autotune, plan_matmul
+from repro.kernels.ternary_matmul import select_block_shapes
+from repro.analysis import autotune_table as autotune_pass
+
+TRACKED = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_autotune.json")
+
+# one valid synthetic cell OUTSIDE the tuning sweep (so the tracked
+# table can never satisfy it): float/base3, aligned, VMEM-feasible
+CELL = dict(m=8, k=256, n=256, phase="decode", platform="cpu",
+            packing="base3", domain="float")
+ENTRY = dict(CELL, blocks=[8, 256, 256], time_s=1e-3,
+             heuristic_blocks=[8, 128, 256], heuristic_time_s=2e-3)
+
+
+def _write(tmp_path, entries, name="table.json"):
+    path = tmp_path / name
+    path.write_text(autotune.canonical_bytes(entries))
+    return str(path)
+
+
+@pytest.fixture
+def table_env(tmp_path, monkeypatch):
+    """Point $REPRO_AUTOTUNE_TABLE at a tmp table and hand back a
+    setter; restores + reloads afterwards (reload drops the plan cache
+    so no stale measured blocks leak across tests)."""
+    def use(path):
+        monkeypatch.setenv(autotune.ENV_VAR, path)
+        autotune.reload_table()
+        return path
+    yield use
+    monkeypatch.delenv(autotune.ENV_VAR, raising=False)
+    autotune.reload_table()
+
+
+# ------------------------------------------------- persistence
+
+
+class TestPersistence:
+    def test_round_trip_is_byte_identical(self, tmp_path):
+        path = _write(tmp_path, [ENTRY])
+        first = open(path).read()
+        again = autotune.save_table(autotune.load_entries(path),
+                                    str(tmp_path / "again.json"))
+        assert open(again).read() == first
+
+    def test_entry_order_cannot_change_the_bytes(self):
+        e2 = dict(ENTRY, m=16, blocks=[16, 256, 256])
+        assert (autotune.canonical_bytes([ENTRY, e2])
+                == autotune.canonical_bytes([e2, ENTRY]))
+
+    def test_save_refuses_invalid_entries(self, tmp_path):
+        bad = dict(ENTRY, blocks=[100, 256, 256])     # unaligned bm
+        with pytest.raises(ValueError, match="refusing to save"):
+            autotune.save_table([bad], str(tmp_path / "bad.json"))
+
+    def test_empty_env_var_disables_the_table(self, table_env):
+        table_env("")
+        assert autotune.lookup_blocks(**CELL) is None
+
+
+# ------------------------------------- plan-resolution integration
+
+
+class TestPlanIntegration:
+    def test_cold_miss_falls_back_to_heuristic(self, table_env, caplog):
+        table_env("")                   # no table at all
+        with caplog.at_level(logging.INFO, "repro.kernels.autotune"):
+            plan = plan_matmul((CELL["m"], CELL["k"], CELL["n"]),
+                               CELL["phase"], backend="pallas",
+                               packing=CELL["packing"])
+        d = plan.describe()
+        assert d["block_source"] == "heuristic"
+        assert tuple(d["blocks"]) == select_block_shapes(
+            CELL["m"], CELL["k"], CELL["n"], CELL["packing"],
+            domain=CELL["domain"])
+        assert any("autotune table miss" in r.message
+                   for r in caplog.records)
+
+    def test_warm_hit_resolves_the_table_blocks(self, tmp_path,
+                                                table_env):
+        table_env(_write(tmp_path, [ENTRY]))
+        plan = plan_matmul((CELL["m"], CELL["k"], CELL["n"]),
+                           CELL["phase"], backend="pallas",
+                           packing=CELL["packing"])
+        d = plan.describe()
+        assert d["block_source"] == "autotune"
+        assert list(d["blocks"]) == ENTRY["blocks"]
+
+    def test_explicit_blocks_pin_over_the_table(self, tmp_path,
+                                                table_env):
+        table_env(_write(tmp_path, [ENTRY]))
+        plan = plan_matmul((CELL["m"], CELL["k"], CELL["n"]),
+                           CELL["phase"], backend="pallas",
+                           packing=CELL["packing"], bm=8, bn=128, bk=256)
+        d = plan.describe()
+        assert d["block_source"] == "pinned"
+        assert tuple(d["blocks"]) == (8, 128, 256)
+
+    def test_doctored_table_degrades_to_heuristic(self, tmp_path,
+                                                  table_env, caplog):
+        bad = dict(ENTRY, blocks=[100, 256, 256])     # unaligned bm
+        path = tmp_path / "doctored.json"
+        path.write_text(json.dumps(
+            {"version": autotune.TABLE_VERSION, "entries": [bad]}))
+        with caplog.at_level(logging.WARNING, "repro.kernels.autotune"):
+            table_env(str(path))
+            plan = plan_matmul((CELL["m"], CELL["k"], CELL["n"]),
+                               CELL["phase"], backend="pallas",
+                               packing=CELL["packing"])
+        assert plan.describe()["block_source"] == "heuristic"
+        assert any("fails validation" in r.message
+                   for r in caplog.records)
+
+
+# ------------------------------------------------ the loud gate
+
+
+class TestAnalysisGate:
+    def _findings(self, tmp_path, entries, doctor=None):
+        payload = json.loads(autotune.canonical_bytes(entries))
+        if doctor:
+            doctor(payload)
+        path = tmp_path / "t.json"
+        path.write_text(json.dumps(payload, indent=2, sort_keys=True)
+                        + "\n")
+        return autotune_pass.run(table_path=str(path))
+
+    def test_missing_table_is_a_finding(self, tmp_path):
+        fs = autotune_pass.run(table_path=str(tmp_path / "absent.json"))
+        assert [f.rule for f in fs] == ["AT004"]
+
+    def test_structure_violation_at001(self, tmp_path):
+        fs = self._findings(tmp_path, [ENTRY],
+                            lambda p: p.__setitem__("version", 99))
+        assert any(f.rule == "AT001" for f in fs)
+
+    def test_alignment_violation_at002(self, tmp_path):
+        fs = self._findings(tmp_path,
+                            [dict(ENTRY, blocks=[8, 100, 256])])
+        assert any(f.rule == "AT002" for f in fs)
+
+    def test_duplicate_cell_at003(self, tmp_path):
+        dup = dict(ENTRY, blocks=[8, 128, 256])
+        fs = self._findings(tmp_path, [ENTRY, dup])
+        assert any(f.rule == "AT003" for f in fs)
+
+    def test_non_canonical_serialization_at005(self, tmp_path):
+        path = tmp_path / "t.json"
+        payload = json.loads(autotune.canonical_bytes(
+            autotune.load_entries(TRACKED)))
+        path.write_text(json.dumps(payload))      # compact, no newline
+        fs = autotune_pass.run(table_path=str(path))
+        assert any(f.rule == "AT005" for f in fs)
+
+    def test_bench_schema_gate_shares_the_contract(self, tmp_path):
+        from benchmarks import schema
+        bad = {"version": autotune.TABLE_VERSION,
+               "entries": [dict(ENTRY, blocks=[8, 100, 256])]}
+        path = tmp_path / "BENCH_autotune.json"
+        path.write_text(json.dumps(bad))
+        errors = schema.validate_file(str(path))
+        assert errors and any("AT002" in e for e in errors)
+
+
+# ------------------------------------------- the tracked artifact
+
+
+class TestTrackedTable:
+    def test_tracked_table_is_clean(self):
+        assert autotune_pass.run() == []
+
+    def test_sweep_cells_resolve_from_the_table(self):
+        import jax
+        platform = jax.default_backend()
+        entries = [e for e in autotune.load_entries(TRACKED)
+                   if e["platform"] == platform]
+        assert entries, f"no {platform} entries in BENCH_autotune.json"
+        e = entries[0]
+        autotune.reload_table()
+        plan = plan_matmul((e["m"], e["k"], e["n"]), e["phase"],
+                           backend="pallas", packing=e["packing"],
+                           domain=e["domain"])
+        d = plan.describe()
+        assert d["block_source"] == "autotune"
+        assert list(d["blocks"]) == e["blocks"]
+
+    def test_measured_candidates_satisfy_the_invariants(self):
+        # every candidate the tuner races must individually pass the
+        # same invariants the gate enforces on the winner
+        cands = autotune.candidate_blocks(8, 1024, 1024, "trit2",
+                                          "float")
+        entries = [dict(ENTRY, k=1024, n=1024, packing="trit2",
+                        blocks=list(b)) for b in cands]
+        for i, e in enumerate(entries):   # distinct cells: vary m
+            e["m"] = 8 * (i + 1)
+        assert autotune.validate_table(json.loads(
+            autotune.canonical_bytes(entries))) == []

@@ -137,7 +137,8 @@ class TestExecutionPlanAPI:
 
     def test_unknown_names_list_choices(self):
         with pytest.raises(ValueError,
-                           match=r"registered: \['device', 'pallas'"):
+                           match=r"registered: \['device', 'paged_attn', "
+                                 r"'paged_attn_ref', 'pallas'"):
             plan_matmul((4, 64, 32), backend="cuda")
         with pytest.raises(ValueError, match=r"'float', 'int8'"):
             plan_matmul((4, 64, 32), domain="fp8")

@@ -418,6 +418,117 @@ def test_sharded_paged_pool_matches_unsharded():
     assert out["identical"]
 
 
+# ------------------------------------------------- fused attention
+
+def test_fused_attn_token_parity():
+    """fused_attn=True (the Pallas page-table read) == fused_attn=False
+    (the slot_view gather) == the dense pool, bitwise, on unaligned
+    prompt lengths — the ISSUE 8 regression currency."""
+    cfg, model, params = _setup()
+    specs = [(0, 8, 6), (1, 6, 8), (2, 13, 5)]
+    fused = PagedScheduler(model, params, capacity=32, slots=2, chunk=3,
+                           page_size=4, fused_attn=True)
+    assert fused.attn_plan is not None
+    assert fused.attn_plan.backend == "paged_attn"
+    assert fused.attn_plan.describe()["kv_layout"] == "paged"
+    gather = PagedScheduler(model, params, capacity=32, slots=2, chunk=3,
+                            page_size=4, fused_attn=False)
+    assert gather.attn_plan is None
+    got_f = _run(fused, _requests(cfg, specs))
+    got_g = _run(gather, _requests(cfg, specs))
+    dense = _run(Scheduler(model, params, capacity=32, slots=2, chunk=3),
+                 _requests(cfg, specs))
+    assert got_f == got_g == dense
+
+
+def test_fused_attn_auto_falls_back_on_interpret_platform(caplog):
+    """'auto' must not serve wallclock through the interpret-mode
+    emulation: on a platform without a real lowering it takes the
+    gather path and says why."""
+    import logging
+    from repro.kernels import plan_matmul
+    probe = plan_matmul((16 * 2, 64, 32), "decode", op="attention",
+                        domain="float", kv_layout="paged")
+    if not probe.interpret:
+        pytest.skip("platform lowers the fused kernel natively")
+    cfg, model, params = _setup()
+    with caplog.at_level(logging.INFO, "repro.serve.engine"):
+        sch = PagedScheduler(model, params, capacity=32, slots=2,
+                             chunk=3, page_size=4)       # fused_attn auto
+    assert sch.attn_plan is None
+    assert any("interpret" in r.getMessage() for r in caplog.records)
+
+
+def test_fused_attn_true_rejects_incapable_pools():
+    """fused_attn=True must raise loudly when no backend can serve the
+    pool — int8 KV carries scale pages the fused read does not consume."""
+    cfg, model, params = _setup(kv_cache_dtype="int8")
+    with pytest.raises(ValueError, match="int8 KV pool"):
+        PagedScheduler(model, params, capacity=32, slots=2, chunk=3,
+                       page_size=4, fused_attn=True)
+
+
+def test_fused_attn_auto_moe_fallback(caplog):
+    """'auto' keeps the gather graph under MoE routing (top-k amplifies
+    the kernel's f32 reassociation into token divergence) — logged."""
+    import logging
+    cfg, model, params = _setup("mixtral-8x7b", sliding_window=0)
+    assert cfg.num_experts > 0
+    with caplog.at_level(logging.INFO, "repro.serve.engine"):
+        sch = PagedScheduler(model, params, capacity=32, slots=2,
+                             chunk=3, page_size=4)
+    assert sch.attn_plan is None
+    assert any("MoE" in r.getMessage() for r in caplog.records)
+
+
+def test_attention_plan_capability():
+    """op='attention' resolves through the registry like any other op:
+    pallas wins on capable platforms, dense layout and non-float
+    domains have no backend and fail loudly."""
+    from repro.kernels import plan_matmul
+    plan = plan_matmul((32, 64, 128), "decode", op="attention",
+                       domain="float", kv_layout="paged")
+    assert plan.backend == "paged_attn"
+    assert plan.describe()["blocks"] is None       # needs_blocks False
+    ref = plan_matmul((32, 64, 128), "decode", op="attention",
+                      domain="float", kv_layout="paged",
+                      backend="paged_attn_ref")
+    assert ref.backend == "paged_attn_ref"
+    with pytest.raises(ValueError, match="no registered backend"):
+        plan_matmul((32, 64, 128), "decode", op="attention",
+                    domain="float", kv_layout="dense")
+    with pytest.raises(ValueError, match="no registered backend"):
+        plan_matmul((32, 64, 128), "decode", op="attention",
+                    domain="int8", kv_layout="paged")
+
+
+def test_paged_attention_kernel_matches_gather_oracle():
+    """The fused kernel's flash statistics against the gather oracle:
+    the running max is bitwise identical; acc/l agree to f32 round-off
+    (online vs single-pass summation order)."""
+    from repro.kernels import paged_attention as pa
+    s, kvh, rep, hd, ps, w = 3, 2, 3, 16, 8, 4
+    key = jax.random.key(11)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (s, kvh, rep, hd),
+                          jnp.float32)
+    pool_shape = (1 + s * w, ps, kvh, hd)
+    k_pages = jax.random.normal(jax.random.fold_in(key, 1), pool_shape,
+                                jnp.float32)
+    v_pages = jax.random.normal(jax.random.fold_in(key, 2), pool_shape,
+                                jnp.float32)
+    table = jnp.arange(1, 1 + s * w, dtype=jnp.int32).reshape(s, w)
+    pos = jnp.asarray([29, 17, 32], jnp.int32)     # page-unaligned too
+    kv = pa.PagedAttentionKV(k_pages, v_pages, table, pos)
+
+    acc, m, l = pa.paged_attention(q, kv, interpret=True)
+    acc_r, m_r, l_r = pa.paged_attention_ref(q, kv)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(m_r))
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_r),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(acc_r),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ------------------------------------------------- bench contract
 
 def test_serve_paged_schema_gate():

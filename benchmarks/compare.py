@@ -8,7 +8,12 @@ exits nonzero when any metric regressed by more than the threshold
 
 Metric collection is recursive over the artifact tree: every numeric
 key starting with ``tok_per_s`` (higher is better) or ``step_time_s``
-(lower is better) becomes one comparison, addressed by its JSON path.
+(lower is better) becomes one comparison, addressed by its JSON path —
+including the ``serve_frontend`` section's throughput and
+goodput-under-overload numbers (``tok_per_s_frontend``,
+``tok_per_s_goodput_slo``; the adversarial FIFO baseline opts out via
+``ungated_metrics``), so a >15% front-end goodput regression fails CI
+like any kernel slowdown.
 List elements that are shape cells (dicts carrying phase/m/k/n/mode)
 are keyed SEMANTICALLY — ``shapes[decode:8x1024x1024:trit2]`` — not by
 index: the fast candidate sweep measures fewer cells than the full
@@ -59,8 +64,9 @@ def collect_metrics(node, prefix: str = "") -> dict:
     A dict may carry ``ungated_metrics``, a list of sibling keys the
     artifact itself declares non-claims (e.g. the fused read's tok/s
     under interpret emulation, where wallclock measures the emulator
-    and the artifact's ``fused_claim_basis`` is byte traffic); those
-    keys are skipped, so either side of the comparison can opt a
+    and the artifact's ``fused_claim_basis`` is byte traffic, or the
+    front-end's deliberately adversarial FIFO-under-overload goodput);
+    those keys are skipped, so either side of the comparison can opt a
     metric out (it drops from the key intersection)."""
     out = {}
     if isinstance(node, dict):

@@ -21,7 +21,7 @@ FIDELITY_ACC_DROP_MAX = 0.05
 TOP_LEVEL = {
     "wallclock": {
         "backend", "platform", "shapes", "serve", "serve_continuous",
-        "serve_paged", "serve_fidelity",
+        "serve_paged", "serve_fidelity", "serve_frontend",
         "min_decode_flop_waste_reduction",
         "claim_waste_reduction_ge_8x",
         "claim_device_loop_single_transfer",
@@ -40,6 +40,10 @@ TOP_LEVEL = {
         "claim_fidelity_degrades_without_scrub",
         "claim_fidelity_scrub_repairs",
         "claim_fidelity_transfer_accounting",
+        "claim_frontend_tokens_identical",
+        "claim_frontend_backpressure_bounded",
+        "claim_frontend_goodput_under_overload",
+        "claim_frontend_transfer_accounting",
     },
     "kernel_bench": {
         "sweep", "max_rel_err", "all_match_oracle",
@@ -71,7 +75,8 @@ SERVE_CONTINUOUS = {
     "claim_chunk_transfer_accounting",
 }
 SERVE_CONTINUOUS_DRIVER = {"tok_per_s", "wall_s", "tokens", "p50_s",
-                           "p99_s"}
+                           "p99_s", "p999_s", "queue_wait_mean_s",
+                           "service_mean_s"}
 SERVE_CONTINUOUS_ONLY = {"slot_occupancy", "host_transfers", "chunks",
                          "decode_steps"}
 
@@ -90,7 +95,7 @@ SERVE_PAGED = {
     "attn_plan", "tok_per_s_paged_fused", "tok_per_s_paged_gather",
     "hbm_bytes_chunk_fused", "hbm_bytes_chunk_gather",
     "hbm_bytes_reduction", "hbm_bytes_source", "fused_claim_basis",
-    "ungated_metrics",
+    "latency_dense", "latency_paged", "ungated_metrics",
     "claim_paged_tokens_identical",
     "claim_paged_kv_bytes_2x",
     "claim_paged_prefix_hits",
@@ -119,6 +124,40 @@ SERVE_FIDELITY = {
     "claim_fidelity_degrades_without_scrub",
     "claim_fidelity_scrub_repairs",
     "claim_fidelity_transfer_accounting",
+}
+
+# wallclock serve_frontend section: the SLO-aware front-end over the
+# model registry (repro.frontend) — parity + throughput vs driving the
+# schedulers directly, the bounded-backpressure overload replay, and
+# the goodput (deadline-met tok/s) comparison of SLO admission vs the
+# FIFO baseline.  FIFO-under-overload is the adversarial baseline, so
+# its goodput lives in ungated_metrics (the schema checks it is there)
+SERVE_FRONTEND = {
+    "models", "queue_limit", "overload_queue_limit",
+    "tok_per_s_frontend", "tok_per_s_direct",
+    "frontend", "overload",
+    "deadline_tight_s", "service_floor_s",
+    "tok_per_s_goodput_slo", "tok_per_s_goodput_fifo",
+    "deadline_met_slo", "deadline_met_fifo", "deadline_total",
+    "shed_slo", "ungated_metrics",
+    "claim_frontend_tokens_identical",
+    "claim_frontend_backpressure_bounded",
+    "claim_frontend_goodput_under_overload",
+    "claim_frontend_transfer_accounting",
+}
+# one warm open-loop epoch's stats (the `frontend` sub-dict): latency
+# percentiles with the queue-wait/service split, TTFT, and the
+# streaming transfer accounting
+SERVE_FRONTEND_EPOCH = {
+    "wall_s", "tokens", "p50_s", "p99_s", "p999_s",
+    "ttft_p50_s", "ttft_p99_s", "queue_wait_mean_s", "service_mean_s",
+    "host_transfers", "chunks",
+}
+# the backpressure replay (the `overload` sub-dict): every submit must
+# be accounted for — completed + rejected, nothing silently dropped
+SERVE_FRONTEND_OVERLOAD = {
+    "submitted", "completed", "rejected", "max_pending_seen",
+    "rejects_by_reason",
 }
 
 
@@ -258,6 +297,59 @@ def validate(name: str, payload: dict) -> list[str]:
                     f"{FIDELITY_ACC_DROP_MAX}")
         elif "serve_fidelity" in payload:
             errors.append("wallclock serve_fidelity: not an object")
+        sfr = payload.get("serve_frontend")
+        if isinstance(sfr, dict):
+            miss = SERVE_FRONTEND - sfr.keys()
+            if miss:
+                errors.append(f"wallclock serve_frontend: missing "
+                              f"{sorted(miss)}")
+            fe = sfr.get("frontend")
+            if isinstance(fe, dict):
+                fmiss = SERVE_FRONTEND_EPOCH - fe.keys()
+                if fmiss:
+                    errors.append(f"wallclock serve_frontend.frontend: "
+                                  f"missing {sorted(fmiss)}")
+            elif "frontend" in sfr:
+                errors.append("wallclock serve_frontend.frontend: not "
+                              "an object")
+            ov = sfr.get("overload")
+            if isinstance(ov, dict):
+                omiss = SERVE_FRONTEND_OVERLOAD - ov.keys()
+                if omiss:
+                    errors.append(f"wallclock serve_frontend.overload: "
+                                  f"missing {sorted(omiss)}")
+                # the no-silent-drop contract, structurally: every
+                # submit of the overload replay is accounted for
+                elif ov["submitted"] != ov["completed"] + ov["rejected"]:
+                    errors.append(
+                        f"wallclock serve_frontend.overload: "
+                        f"{ov['submitted']} submitted != "
+                        f"{ov['completed']} completed + "
+                        f"{ov['rejected']} rejected (a request was "
+                        f"silently dropped)")
+            elif "overload" in sfr:
+                errors.append("wallclock serve_frontend.overload: not "
+                              "an object")
+            ungated = sfr.get("ungated_metrics")
+            if isinstance(ungated, list):
+                for key in ungated:
+                    if key not in sfr:
+                        errors.append(
+                            f"wallclock serve_frontend: ungated_metrics "
+                            f"names absent key {key!r}")
+                # the FIFO-baseline goodput is adversarial by design;
+                # it must never be gated as a perf claim
+                if "tok_per_s_goodput_fifo" not in ungated:
+                    errors.append(
+                        "wallclock serve_frontend: "
+                        "tok_per_s_goodput_fifo is missing from "
+                        "ungated_metrics (the adversarial FIFO "
+                        "baseline must not be regression-gated)")
+            elif "ungated_metrics" in sfr:
+                errors.append("wallclock serve_frontend: "
+                              "ungated_metrics is not a list")
+        elif "serve_frontend" in payload:
+            errors.append("wallclock serve_frontend: not an object")
     return errors
 
 

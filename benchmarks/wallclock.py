@@ -312,7 +312,7 @@ def serve_continuous_bench(fast: bool = False,
         stats = dict(stats)
         for key_, pick in (("tok_per_s", max), ("wall_s", min),
                            ("p50_s", min), ("p99_s", min),
-                           ("mean_s", min)):
+                           ("p999_s", min), ("mean_s", min)):
             stats[key_] = pick(r[0][key_] for r in replays)
         return stats, done
 
@@ -379,7 +379,7 @@ def serve_paged_bench(fast: bool = False,
     from repro import configs
     from repro.models import registry
     from repro.serve import (PagedScheduler, Request, Scheduler,
-                             bursty_arrivals, make_trace)
+                             bursty_arrivals, latency_stats, make_trace)
 
     cfg = dataclasses.replace(configs.smoke(arch), dtype=jnp.float32,
                               d_model=256, d_ff=768, num_layers=4)
@@ -468,7 +468,8 @@ def serve_paged_bench(fast: bool = False,
         done = eng.completed[done0:]
         tokens = eng.generated_tokens - tok0
         return (round(tokens / max(wall, 1e-9), 1), round(wall, 3),
-                tokens, {r.uid: list(r.out_tokens) for r in done})
+                tokens, {r.uid: list(r.out_tokens) for r in done},
+                latency_stats(done))
 
     engines = [dense, paged, fused]
     if gather is not paged:
@@ -492,6 +493,10 @@ def serve_paged_bench(fast: bool = False,
     paged_tokps = max(r[0] for r in replays[id(paged)])
     fused_tokps = max(r[0] for r in replays[id(fused)])
     gather_tokps = max(r[0] for r in replays[id(gather)])
+    # request-latency breakdown (p50/p99/p999 + queue-wait vs service)
+    # from each pool's min-wall replay — the noise-clean estimate
+    latency_dense = min(replays[id(dense)], key=lambda r: r[1])[4]
+    latency_paged = min(replays[id(paged)], key=lambda r: r[1])[4]
     dense_out = replays[id(dense)][-1][3]
     paged_out = replays[id(paged)][-1][3]
     fused_out = replays[id(fused)][-1][3]
@@ -522,6 +527,8 @@ def serve_paged_bench(fast: bool = False,
         "pages_in_use_peak": paged.allocator.peak_in_use,
         "prefix_hit_rate": round(paged.prefix_hit_rate, 4),
         "prefix_hits": paged.allocator.prefix_hits,
+        "latency_dense": latency_dense,
+        "latency_paged": latency_paged,
         # fused-vs-gather decode read (ISSUE 8): the resolved attention
         # plan, both paths' tok/s, and the measured chunk byte traffic
         "attn_plan": fused.attn_plan.describe(),
@@ -749,6 +756,174 @@ def serve_fidelity_bench(fast: bool = False,
     }
 
 
+def serve_frontend_bench(fast: bool = False) -> dict:
+    """The SLO-aware serving front-end (``repro.frontend``) over a
+    two-model registry, measured three ways:
+
+      * **parity + throughput** — an open-loop trace replayed through
+        ``FrontendServer`` (bounded queue, streaming, round-robin over
+        per-model ``PagedScheduler`` pools) vs the SAME records driven
+        straight into the same pools' ``run()``.  Per-request tokens
+        must be bitwise identical (the front-end re-orders admission,
+        never re-implements scheduling), and streaming must add zero
+        transfers (``host_transfers == chunks`` across every pool).
+      * **backpressure** — the burst replayed into a ``queue_limit=2``
+        server: the pending queue never exceeds the bound and every
+        submit is accounted for (completed + rejected, each reject
+        with a reason).
+      * **goodput under overload** — a 12-request burst of interactive
+        requests (priority 0, a deadline calibrated to ~0.6x the
+        measured warm makespan) interleaved with no-deadline batch
+        requests, served under ``SLOAdmission`` vs the FIFO baseline.
+        The currency is GOODPUT: deadline-met tokens per second —
+        tokens of requests that miss their deadline earn nothing.  SLO
+        admission serves the interactive class first (and sheds
+        pending requests whose deadline became unmeetable), so its
+        goodput must beat FIFO's, whose late interactive requests blow
+        their deadlines behind batch traffic.  FIFO-under-overload is
+        adversarial by design, so its goodput is in
+        ``ungated_metrics`` — benchmarks/compare.py gates the SLO
+        number only.
+
+    Deadlines calibrate against the measured warm parity-replay
+    makespan, so the overload scenario tracks host speed instead of
+    hard-coding seconds.  Fixed pre-registered best-of-N throughout,
+    interleaved across the compared sides.
+    """
+    from repro.frontend import (FIFOAdmission, FrontendServer,
+                                ModelRegistry, ModelSpec, SLOAdmission,
+                                replay, replay_direct, trace_requests)
+    from repro.serve import make_trace
+
+    models = ["internlm2-1.8b", "qwen3-14b"]
+    slots, chunk, queue_limit = 2, 4, 32
+    reg = ModelRegistry()
+    for name in models:
+        reg.register(ModelSpec(name=name, arch=name, smoke=True,
+                               kind="paged", capacity=64, slots=slots,
+                               chunk=chunk, page_size=16))
+
+    # same replay count in both modes (cf. serve_paged: the fast run's
+    # numbers feed the bench-compare gate against the full-sweep
+    # baseline, and min-of-N asymmetry is structural skew, not noise)
+    repeats = 4
+
+    # ------------------------- parity + throughput vs direct pools
+    n = 8
+    trace = make_trace([0.0] * n, [8, 12], [8, 12])
+    records = trace_requests(trace, reg, models, seed=0)
+    server = FrontendServer(reg, FIFOAdmission(),
+                            queue_limit=queue_limit)
+    replay(server, records)            # warmup: compile every pool key
+    replay_direct(reg, records)
+    fe_tokps = dt_tokps = 0.0
+    fe_best = dt_out = None
+    for _ in range(repeats):           # interleaved fixed-N best-of
+        r = replay(server, records, collect_tokens=True)
+        fe_tokps = max(fe_tokps, r["tok_per_s"])
+        if fe_best is None or r["wall_s"] < fe_best["wall_s"]:
+            fe_best = r
+        stats, toks = replay_direct(reg, records)
+        dt_tokps = max(dt_tokps, stats["tok_per_s"])
+        dt_out = toks
+    # uids restart per direct epoch but grow monotonically across
+    # server epochs; both sides list tokens in uid order == submission
+    # order == record order, so the parity compare is positional
+    fe_tokens = [fe_best["out_tokens"][k]
+                 for k in sorted(fe_best["out_tokens"])]
+    dt_tokens = [dt_out[k] for k in sorted(dt_out)]
+    warm_wall = fe_best["wall_s"]
+
+    # ---------------------------------- backpressure at the bound
+    bp_server = FrontendServer(reg, FIFOAdmission(), queue_limit=2)
+    bp = replay(bp_server, records)
+    bp_bounded = (
+        bp_server.max_pending_seen <= bp_server.queue_limit
+        and bp_server.submitted == (len(bp_server.completed)
+                                    + len(bp_server.rejected))
+        and bp["rejects_by_reason"].get("queue-full", 0) > 0)
+
+    # --------------------------------- goodput: SLO vs FIFO admission
+    # class cycle of 4 so each model (assigned round-robin by record
+    # index) serves both classes: interactive (priority 0, short,
+    # tight deadline) and batch (priority 1, long, no deadline)
+    # interactive deadline at 1.1x the warm 8-request makespan: under
+    # SLO admission the interactive class is served first and fully
+    # drains near ~0.85x (its 6 requests alone, on the 2-slot pools) —
+    # met with margin, so the GATED goodput number is stable — while
+    # the overload trace's makespan is ~1.65x and FIFO's last
+    # interactive per model lands near ~1.3x behind the 16-token batch
+    # rows, a structural miss rather than a borderline one
+    n_over = 12
+    tight = round(1.1 * warm_wall, 4)
+    floor = round(0.1 * warm_wall, 4)
+    over_trace = make_trace([0.0] * n_over,
+                            prompt_lens=[8, 12, 12, 8],
+                            max_news=[6, 16, 16, 6],
+                            priorities=[0, 1, 1, 0],
+                            deadlines=[tight, None, None, tight])
+    over_records = trace_requests(over_trace, reg, models, seed=1)
+
+    def goodput_replay(policy):
+        srv = FrontendServer(reg, policy, queue_limit=n_over)
+        return replay(srv, over_records)
+
+    policies = (("fifo", lambda: FIFOAdmission()),
+                ("slo", lambda: SLOAdmission(service_floor_s=floor)))
+    for _, mk in policies:             # warmup: the overload loop keys
+        goodput_replay(mk())
+    best: dict = {"fifo": None, "slo": None}
+    for _ in range(repeats):           # interleaved fixed-N best-of
+        for pname, mk in policies:
+            r = goodput_replay(mk())
+            if best[pname] is None or (r["tok_per_s_goodput"]
+                                       > best[pname]["tok_per_s_goodput"]):
+                best[pname] = r
+    slo, fifo = best["slo"], best["fifo"]
+
+    transfers = sum(reg.entry(m).scheduler.host_transfers
+                    for m in reg.names())
+    chunks = sum(reg.entry(m).scheduler.chunks_run for m in reg.names())
+
+    epoch_keys = ("wall_s", "tokens", "p50_s", "p99_s", "p999_s",
+                  "ttft_p50_s", "ttft_p99_s", "queue_wait_mean_s",
+                  "service_mean_s", "host_transfers", "chunks")
+    return {
+        "models": models, "requests": n, "slots": slots, "chunk": chunk,
+        "queue_limit": queue_limit, "overload_queue_limit": 2,
+        "capacity_report": reg.capacity_report(),
+        "trace": trace,
+        "tok_per_s_frontend": fe_tokps,
+        "tok_per_s_direct": dt_tokps,
+        "frontend": {k: fe_best[k] for k in epoch_keys},
+        "overload": {k: bp[k] for k in
+                     ("submitted", "completed", "rejected",
+                      "max_pending_seen", "rejects_by_reason")},
+        "goodput_trace": over_trace,
+        "deadline_tight_s": tight,
+        "service_floor_s": floor,
+        "tok_per_s_goodput_slo": slo["tok_per_s_goodput"],
+        "tok_per_s_goodput_fifo": fifo["tok_per_s_goodput"],
+        "deadline_met_slo": slo["deadline_met"],
+        "deadline_met_fifo": fifo["deadline_met"],
+        "deadline_total": slo["deadline_total"],
+        "shed_slo": slo["shed"],
+        "ttft_p50_s_slo": slo["ttft_p50_s"],
+        "ttft_p50_s_fifo": fifo["ttft_p50_s"],
+        # FIFO-under-overload is the adversarial baseline: how much it
+        # loses is host-noise-sensitive by construction (borderline
+        # deadlines), so it must not be regression-gated
+        "ungated_metrics": ["tok_per_s_goodput_fifo"],
+        # per-request token VALUES through the front-end (bitwise)
+        "claim_frontend_tokens_identical": fe_tokens == dt_tokens,
+        "claim_frontend_backpressure_bounded": bp_bounded,
+        "claim_frontend_goodput_under_overload":
+            slo["tok_per_s_goodput"] > fifo["tok_per_s_goodput"],
+        # streaming adds no transfers, across every pool's lifetime
+        "claim_frontend_transfer_accounting": transfers == chunks,
+    }
+
+
 def run(verbose: bool = True, fast: bool = False,
         write_root: bool | None = None) -> dict:
     """write_root=True rewrites the tracked repo-root baseline
@@ -771,6 +946,7 @@ def run(verbose: bool = True, fast: bool = False,
     serve_continuous = serve_continuous_bench(fast=fast)
     serve_paged = serve_paged_bench(fast=fast)
     serve_fidelity = serve_fidelity_bench(fast=fast)
+    serve_frontend = serve_frontend_bench(fast=fast)
     decode = DECODE_SHAPES[:2] if fast else DECODE_SHAPES
     prefill = PREFILL_SHAPES[:1] if fast else PREFILL_SHAPES
     shapes = []
@@ -794,6 +970,7 @@ def run(verbose: bool = True, fast: bool = False,
         "serve_continuous": serve_continuous,
         "serve_paged": serve_paged,
         "serve_fidelity": serve_fidelity,
+        "serve_frontend": serve_frontend,
         "min_decode_flop_waste_reduction": min_reduction,
         "claim_waste_reduction_ge_8x": bool(min_reduction >= 8.0),
         "claim_device_loop_single_transfer":
@@ -827,6 +1004,14 @@ def run(verbose: bool = True, fast: bool = False,
             serve_fidelity["claim_fidelity_scrub_repairs"],
         "claim_fidelity_transfer_accounting":
             serve_fidelity["claim_fidelity_transfer_accounting"],
+        "claim_frontend_tokens_identical":
+            serve_frontend["claim_frontend_tokens_identical"],
+        "claim_frontend_backpressure_bounded":
+            serve_frontend["claim_frontend_backpressure_bounded"],
+        "claim_frontend_goodput_under_overload":
+            serve_frontend["claim_frontend_goodput_under_overload"],
+        "claim_frontend_transfer_accounting":
+            serve_frontend["claim_frontend_transfer_accounting"],
     }
     if verbose:
         print(f"  {len(shapes)} shape cells ({backend} backend); decode "
@@ -877,6 +1062,20 @@ def run(verbose: bool = True, fast: bool = False,
               f"{sf['tok_per_s_device']} tok/s device vs "
               f"{sf['tok_per_s_exact']} exact, "
               f"{sf['scrub_energy_j']*1e9:.2f}nJ scrub energy")
+        sfr = serve_frontend
+        print(f"  frontend: {sfr['tok_per_s_frontend']} tok/s vs "
+              f"direct {sfr['tok_per_s_direct']} (tokens identical: "
+              f"{sfr['claim_frontend_tokens_identical']}, "
+              f"transfers==chunks: "
+              f"{sfr['claim_frontend_transfer_accounting']}); "
+              f"overload goodput slo {sfr['tok_per_s_goodput_slo']} "
+              f"vs fifo {sfr['tok_per_s_goodput_fifo']} tok/s "
+              f"(deadlines met {sfr['deadline_met_slo']} vs "
+              f"{sfr['deadline_met_fifo']} of {sfr['deadline_total']}, "
+              f"shed {sfr['shed_slo']}; beats fifo: "
+              f"{sfr['claim_frontend_goodput_under_overload']}); "
+              f"backpressure bounded: "
+              f"{sfr['claim_frontend_backpressure_bounded']}")
     if write_root:
         save_bench_json("wallclock", out)
     else:

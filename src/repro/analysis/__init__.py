@@ -1,7 +1,7 @@
 """Static contract checker + sanitizer for plans, kernels, and serve
 loops (`python -m repro.analysis`, `make analyze`).
 
-Five passes, each a ``run() -> list[Finding]``:
+Six passes, each a ``run() -> list[Finding]``:
 
   * ``capability`` — the (op x backend x domain x packing x kv_layout
     x platform) lattice from the live kernel registry: declared cells
@@ -21,23 +21,30 @@ Five passes, each a ``run() -> list[Finding]``:
     context manager is also importable for tests.
   * ``lint`` — AST rules for the standing constraints (no blind
     except swallows, no device_get outside the audited chokepoint, no
-    routing kwargs around the plan API, no unseeded benchmark RNG).
+    routing kwargs around the plan API, no unseeded benchmark RNG, and
+    the front-end purity rules of RA005).
+  * ``frontend`` — the serving front-end's dynamic contracts:
+    streaming adds zero transfers (one per chunk survives the
+    front-end), the pending queue stays bounded with every reject
+    accounted, and admission replays deterministically under a virtual
+    clock.
 
 Rule catalog and suppression syntax: src/repro/analysis/README.md.
 """
 from .base import Finding, rel  # noqa: F401
 from .sanitizer import (SanitizeError, SanitizeReport,  # noqa: F401
                         sanitize)
-from . import (autotune_table, blockmap, capability, lint,  # noqa: F401
-               sanitizer)
+from . import (autotune_table, blockmap, capability,  # noqa: F401
+               frontend, lint, sanitizer)
 
 # CLI/run order: cheap static passes first, the model-building
-# sanitizer last
+# dynamic passes last
 PASSES = (("capability", capability.run),
           ("blockmap", blockmap.run),
           ("autotune", autotune_table.run),
           ("lint", lint.run),
-          ("sanitize", sanitizer.run))
+          ("sanitize", sanitizer.run),
+          ("frontend", frontend.run))
 
 
 def run_all() -> list:

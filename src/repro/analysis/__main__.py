@@ -10,7 +10,8 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import PASSES, autotune_table, blockmap, capability, lint, sanitizer
+from . import (PASSES, autotune_table, blockmap, capability, frontend,
+               lint, sanitizer)
 
 
 def main(argv=None) -> int:
@@ -20,7 +21,8 @@ def main(argv=None) -> int:
                     "(src/repro/analysis/README.md)")
     p.add_argument("--passes", default=None,
                    help="comma-separated subset to run (capability,"
-                        "blockmap,autotune,lint,sanitize); default all")
+                        "blockmap,autotune,lint,sanitize,frontend); "
+                        "default all")
     p.add_argument("--list", action="store_true",
                    help="list passes and exit")
     p.add_argument("--emit-matrix", action="store_true",
@@ -41,6 +43,12 @@ def main(argv=None) -> int:
                    choices=("transfer", "retrace"),
                    help="sanitize pass: seed an extra device->host "
                         "transfer or a post-warmup retrace "
+                        "(violation injection)")
+    p.add_argument("--inject-frontend", default=None,
+                   choices=("transfer", "drop", "order"),
+                   help="frontend pass: seed an extra streaming "
+                        "transfer, an accounting drop, or a "
+                        "non-deterministic admission order "
                         "(violation injection)")
     p.add_argument("--lint-paths", default=None, metavar="P1,P2",
                    help="lint pass: scan these paths instead of the "
@@ -84,6 +92,9 @@ def main(argv=None) -> int:
             config=args.rules),
         "sanitize": lambda: sanitizer.run(
             inject=(args.inject_sanitize,) if args.inject_sanitize
+            else ()),
+        "frontend": lambda: frontend.run(
+            inject=(args.inject_frontend,) if args.inject_frontend
             else ()),
     }
 

@@ -23,6 +23,16 @@ Rules (catalog + rationale in src/repro/analysis/README.md):
          ``PRNGKey`` construction whose seed is neither an int literal
          nor a ``stable_seed(...)`` derivation — all make benchmark
          numbers irreproducible (or reshuffle when a sweep is edited)
+  RA005  front-end purity (``src/repro/frontend/``): the front-end
+         layers on the schedulers' audited chunk transfer, so
+         ``jax.device_get`` (in any form) is banned outright there;
+         admission must be deterministic given (trace, seed), so
+         direct wall-clock CALLS (``time.time()``/``monotonic()``/
+         ``perf_counter()`` — passing the function as an injectable
+         default is fine) and global/unseeded RNG are banned; queues
+         must be bounded, so ``deque()`` without ``maxlen`` is banned
+         (the dynamic side of all three lives in the ``frontend``
+         analysis pass)
 
 Suppressions:
 
@@ -67,6 +77,16 @@ ROUTED_CALLEES = frozenset(
 # the one layer allowed to speak routing kwargs: the shims that accept
 # them and the runners that forward them into pallas kernels
 RA003_EXEMPT_PREFIX = os.path.join("src", "repro", "kernels") + os.sep
+
+# RA005: the front-end package must stay deterministic (injectable
+# clock, no global RNG), transfer-free (no device_get — it consumes the
+# schedulers' chunk payload), and bounded (no unbounded deque queues).
+# Only CALLS are flagged: `clock=time.monotonic` as an injectable
+# default argument is the sanctioned idiom.
+RA005_PREFIX = os.path.join("src", "repro", "frontend") + os.sep
+WALLCLOCK_FNS = frozenset(
+    {"time", "monotonic", "perf_counter", "time_ns", "monotonic_ns",
+     "perf_counter_ns"})
 
 # RA004: legacy numpy global-RNG sampling + stdlib random module fns
 NP_LEGACY_SAMPLERS = frozenset(
@@ -257,10 +277,11 @@ def _dotted(node) -> str:
 
 class _Visitor(ast.NodeVisitor):
     def __init__(self, path: str, in_benchmarks: bool,
-                 ra003_exempt: bool):
+                 ra003_exempt: bool, in_frontend: bool = False):
         self.path = path
         self.in_benchmarks = in_benchmarks
         self.ra003_exempt = ra003_exempt
+        self.in_frontend = in_frontend
         self.func_stack: list = []
         self.findings: list = []
 
@@ -290,20 +311,28 @@ class _Visitor(ast.NodeVisitor):
                            f"failure")
         self.generic_visit(node)
 
-    # --- RA002 ------------------------------------------------
+    # --- RA002 / RA005 (device_get) ---------------------------
     def visit_Attribute(self, node: ast.Attribute) -> None:
-        if (_dotted(node) == "jax.device_get"
-                and "_device_get" not in self.func_stack):
-            self._flag("RA002", node,
-                       "jax.device_get outside an audited _device_get "
-                       "chokepoint; route device->host syncs through "
-                       "the engine's counted chokepoint")
+        if _dotted(node) == "jax.device_get":
+            if self.in_frontend:
+                self._flag("RA005", node,
+                           "jax.device_get in the front-end; streaming "
+                           "must consume the schedulers' per-chunk "
+                           "payload (host_transfers == chunks), never "
+                           "add its own device->host sync")
+            elif "_device_get" not in self.func_stack:
+                self._flag("RA002", node,
+                           "jax.device_get outside an audited "
+                           "_device_get chokepoint; route device->host "
+                           "syncs through the engine's counted "
+                           "chokepoint")
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
         if node.module == "jax" and any(a.name == "device_get"
                                         for a in node.names):
-            self._flag("RA002", node,
+            rule = "RA005" if self.in_frontend else "RA002"
+            self._flag(rule, node,
                        "importing device_get from jax bypasses the "
                        "audited _device_get chokepoint")
         self.generic_visit(node)
@@ -323,7 +352,46 @@ class _Visitor(ast.NodeVisitor):
                            f"instead")
         if self.in_benchmarks:
             self._check_rng(node, callee, leaf)
+        if self.in_frontend:
+            self._check_frontend(node, callee, leaf)
         self.generic_visit(node)
+
+    def _check_frontend(self, node: ast.Call, callee: str,
+                        leaf: str) -> None:
+        parts = callee.split(".")
+        if len(parts) == 2 and parts[0] == "time" \
+                and parts[1] in WALLCLOCK_FNS:
+            self._flag("RA005", node,
+                       f"{callee}() reads the wall clock directly; the "
+                       f"front-end must read time only through an "
+                       f"injected clock (pass the function as a "
+                       f"default, call the injected name) so replays "
+                       f"are deterministic under a virtual clock")
+        elif (len(parts) == 3 and parts[0] in ("np", "numpy")
+                and parts[1] == "random"
+                and parts[2] in NP_LEGACY_SAMPLERS):
+            self._flag("RA005", node,
+                       f"{callee}() samples from numpy's global RNG; "
+                       f"admission must be deterministic given "
+                       f"(trace, seed) — use a seeded Generator")
+        elif len(parts) == 2 and parts[0] == "random" \
+                and parts[1] in STDLIB_RANDOM_FNS:
+            self._flag("RA005", node,
+                       f"{callee}() uses the stdlib global RNG; "
+                       f"admission must be deterministic given "
+                       f"(trace, seed) — use a seeded Generator")
+        elif leaf == "default_rng" and not node.args and not node.keywords:
+            self._flag("RA005", node,
+                       "default_rng() without a seed is entropy-seeded; "
+                       "the front-end must derive every draw from "
+                       "(trace, seed)")
+        elif leaf == "deque" and len(node.args) < 2 \
+                and not any(k.arg == "maxlen" for k in node.keywords):
+            self._flag("RA005", node,
+                       "deque() without maxlen is an unbounded queue; "
+                       "front-end queues are bounded by contract "
+                       "(reject with a reason, never buffer without "
+                       "limit)")
 
     def _check_rng(self, node: ast.Call, callee: str, leaf: str) -> None:
         parts = callee.split(".")
@@ -387,7 +455,9 @@ def check_file(path: str, rel_path: Optional[str] = None) -> list:
         return findings
     in_benchmarks = rel_path.startswith("benchmarks" + os.sep)
     ra003_exempt = rel_path.startswith(RA003_EXEMPT_PREFIX)
-    visitor = _Visitor(rel_path, in_benchmarks, ra003_exempt)
+    in_frontend = rel_path.startswith(RA005_PREFIX)
+    visitor = _Visitor(rel_path, in_benchmarks, ra003_exempt,
+                       in_frontend)
     visitor.visit(tree)
     for f in visitor.findings:
         lineno = int(f.where.rsplit(":", 1)[1])

@@ -1,0 +1,17 @@
+"""SLO-aware serving front-end over the continuous schedulers.
+
+Layered strictly on top of ``repro.serve`` (the schedulers' public
+pump API — no new kwargs through ops/CIMConfig): a bounded-queue
+in-process server with explicit backpressure and per-chunk token
+streaming (:mod:`.server`), priority/deadline admission with load
+shedding (:mod:`.admission`), a lazy multi-model registry
+(:mod:`.registry`), and an open-loop trace-replay load harness
+(:mod:`.loadgen`).  Contracts and overload semantics:
+src/repro/frontend/README.md.
+"""
+from .admission import (FIFOAdmission, SLOAdmission,  # noqa: F401
+                        deadline_at)
+from .registry import ModelEntry, ModelRegistry, ModelSpec  # noqa: F401
+from .server import FrontendServer, Stream  # noqa: F401
+from .loadgen import (VirtualClock, replay, replay_direct,  # noqa: F401
+                      trace_requests)

@@ -1,0 +1,86 @@
+"""Admission policies for the serving front-end.
+
+A policy answers two questions each time the server polls, both as
+pure functions of the pending request set and the server's clock value
+``now`` (seconds since the serve epoch):
+
+  * in what ORDER should pending requests be offered to free slots
+    (``sort_key`` — Python's sort is stable, so equal keys keep
+    submission order);
+  * which pending requests should be SHED instead of admitted
+    (``shed_reason`` — a non-None reason string rejects the request;
+    the server counts it, it is never silently dropped).
+
+Determinism is a contract, not a hope: policies take the clock VALUE
+as an argument and carry no RNG or wall-clock reads of their own, so
+admission is reproducible given (trace, seed) — lint rule RA005
+enforces the no-wall-clock/no-global-RNG part statically and the
+``frontend`` analysis pass replays a trace twice under a virtual clock
+and diffs the admission logs.
+
+Deadlines are RELATIVE: ``Request.deadline_s`` is a completion budget
+from the request's ``arrival_s`` (``deadline_at`` converts to the
+absolute serve-clock deadline the policies compare against).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def deadline_at(req) -> float:
+    """Absolute serve-clock deadline (arrival + relative budget);
+    +inf when the request carries no deadline."""
+    if req.deadline_s is None:
+        return float("inf")
+    return req.arrival_s + req.deadline_s
+
+
+class FIFOAdmission:
+    """Pure FIFO: admit in (arrival, uid) order, never shed.  The
+    baseline the SLO policy's goodput is benchmarked against."""
+
+    name = "fifo"
+
+    def sort_key(self, req, now: float):
+        return (req.arrival_s, req.uid)
+
+    def shed_reason(self, req, now: float) -> Optional[str]:
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOAdmission:
+    """Priority classes + earliest-deadline-first + load shedding.
+
+    Admission order (``sort_key``): ``priority`` first (lower = more
+    urgent — an urgent class preempts FIFO order at ADMISSION; running
+    slots are never revoked), then the absolute deadline (EDF — the
+    deadline-based deferral of loose requests behind tight ones), then
+    (arrival, uid) as the stable FIFO tie-break.
+
+    Shedding (``shed_reason``): a pending request whose deadline can no
+    longer be met is rejected instead of occupying a slot another
+    request could still use — ``deadline-passed`` when ``now`` is
+    already at/past the absolute deadline, and (with a configured
+    ``service_floor_s`` estimate of the minimum time a request needs
+    once admitted) ``deadline-unmeetable`` when ``now +
+    service_floor_s`` overshoots it.  Requests without a deadline are
+    never shed.
+    """
+
+    service_floor_s: float = 0.0
+    name: str = "slo"
+
+    def sort_key(self, req, now: float):
+        return (req.priority, deadline_at(req), req.arrival_s, req.uid)
+
+    def shed_reason(self, req, now: float) -> Optional[str]:
+        dl = deadline_at(req)
+        if dl == float("inf"):
+            return None
+        if now >= dl:
+            return "deadline-passed"
+        if now + self.service_floor_s > dl:
+            return "deadline-unmeetable"
+        return None

@@ -1,0 +1,161 @@
+"""Model registry: several architectures behind one submit path.
+
+The front-end multiplexes models the way the paper's density argument
+multiplexes networks on one chip (and CIMPool multiplexes models over
+a shared CIM pool): each registered :class:`ModelSpec` names an
+architecture from ``repro.configs`` and owns its OWN scheduler pool —
+per-model slots, chunk size and KV capacity — while
+``FrontendServer.submit(model=...)`` is the single entry point.
+
+Instantiation is lazy: registering a spec is free; the model is built,
+its params initialized and its scheduler compiled the first time a
+request targets it (``entry``).  ``capacity_report`` summarizes every
+registered model — including uninstantiated ones — so an operator can
+see what a deployment would resident before paying for it.
+
+Per the seams rule, everything execution-related rides existing
+registry/plan machinery: ``configs.smoke``/``configs.get`` +
+``models.registry.build`` + ``serve.PagedScheduler`` — no new kwargs
+through ops or CIMConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """One serveable model: an architecture name plus its scheduler
+    pool geometry.  ``capacity`` bounds one request's prompt + decode
+    budget (requests over it are rejected at submit with
+    ``over-capacity``, never mid-decode).  ``overrides`` is a tuple of
+    ``(field, value)`` pairs applied to the resolved ModelConfig
+    (hashable, so specs stay frozen); ``dtype='float32'`` by default —
+    the offline-CI pools serve f32 on the CPU host."""
+
+    name: str
+    arch: str
+    smoke: bool = True               # configs.smoke vs configs.get
+    kind: str = "paged"              # 'paged' | 'dense' scheduler pool
+    capacity: int = 64
+    slots: int = 4
+    chunk: int = 4
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    seed: int = 0
+    dtype: str = "float32"
+    overrides: tuple = ()
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    """A lazily built model: config + model + params + scheduler."""
+
+    spec: ModelSpec
+    cfg: object
+    model: object
+    params: object
+    scheduler: object
+
+
+class ModelRegistry:
+    """Named :class:`ModelSpec`s with lazy scheduler instantiation."""
+
+    def __init__(self):
+        self._specs: dict[str, ModelSpec] = {}
+        self._entries: dict[str, ModelEntry] = {}
+        self._cfgs: dict[str, object] = {}
+
+    def register(self, spec: ModelSpec) -> None:
+        if spec.name in self._specs:
+            raise ValueError(f"model {spec.name!r} already registered")
+        if spec.kind not in ("paged", "dense"):
+            raise ValueError(f"model {spec.name!r}: kind must be "
+                             f"'paged' or 'dense', got {spec.kind!r}")
+        self._specs[spec.name] = spec
+
+    def names(self) -> list[str]:
+        return sorted(self._specs)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    def spec(self, name: str) -> ModelSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise KeyError(f"unknown model {name!r}; registered: "
+                           f"{self.names()}") from None
+
+    def is_instantiated(self, name: str) -> bool:
+        return name in self._entries
+
+    def config(self, name: str):
+        """The resolved ModelConfig for a registered model — cheap
+        (no weights); cached so submit-path vocab lookups don't
+        re-resolve."""
+        if name not in self._cfgs:
+            import jax.numpy as jnp
+
+            from repro import configs
+
+            spec = self.spec(name)
+            cfg = (configs.smoke(spec.arch) if spec.smoke
+                   else configs.get(spec.arch))
+            fields = dict(spec.overrides)
+            fields.setdefault("dtype", getattr(jnp, spec.dtype))
+            self._cfgs[name] = dataclasses.replace(cfg, **fields)
+        return self._cfgs[name]
+
+    def entry(self, name: str) -> ModelEntry:
+        """The live scheduler for a model, building it on first use."""
+        if name not in self._entries:
+            import jax
+
+            from repro.models import registry as model_registry
+            from repro.serve import PagedScheduler, Scheduler
+
+            spec = self.spec(name)
+            cfg = self.config(name)
+            model = model_registry.build(cfg)
+            params = model.init(jax.random.key(spec.seed))
+            if spec.kind == "paged":
+                sched = PagedScheduler(
+                    model, params, capacity=spec.capacity,
+                    slots=spec.slots, chunk=spec.chunk,
+                    page_size=spec.page_size, num_pages=spec.num_pages)
+            else:
+                sched = Scheduler(model, params, capacity=spec.capacity,
+                                  slots=spec.slots, chunk=spec.chunk)
+            self._entries[name] = ModelEntry(
+                spec=spec, cfg=cfg, model=model, params=params,
+                scheduler=sched)
+        return self._entries[name]
+
+    def capacity_report(self) -> dict:
+        """Per-model capacity summary (registered AND uninstantiated
+        models both appear; live pools add their accounting)."""
+        report = {}
+        for name in self.names():
+            spec = self._specs[name]
+            row = {"arch": spec.arch, "kind": spec.kind,
+                   "slots": spec.slots, "chunk": spec.chunk,
+                   "capacity": spec.capacity,
+                   "instantiated": name in self._entries}
+            if name in self._entries:
+                ent = self._entries[name]
+                sched = ent.scheduler
+                row.update(
+                    family=ent.cfg.family,
+                    params_m=round(ent.cfg.param_count() / 1e6, 2),
+                    vocab_size=ent.cfg.vocab_size,
+                    kv_bytes_pool=sched.kv_bytes(),
+                    host_transfers=sched.host_transfers,
+                    chunks=sched.chunks_run)
+                if spec.kind == "paged":
+                    row.update(page_size=sched.page_size,
+                               num_pages=sched.num_pages,
+                               pages_in_use=sched.pages_in_use)
+            report[name] = row
+        return report

@@ -2,23 +2,34 @@
 packed) model.  The paper's end-to-end mode: weights stored at 1 byte /
 5-trit weight (base3) or 2 bits/trit (trit2) and dequantized on-load.
 
-Two drivers:
+Three drivers:
   * bucket (default) — ServeEngine pops one prompt-length bucket at a
     time (on-device decode loop per bucket);
   * ``--continuous`` — the continuous-batching Scheduler: a persistent
     pool of ``--slots`` decode slots, chunked on-device decode
     (``--chunk`` steps per host yield) with prefill-into-freed-slot
-    admission.
+    admission;
+  * ``--frontend`` — the SLO-aware serving front-end
+    (``repro.frontend``): a model registry (``--frontend-models``, one
+    scheduler pool per architecture) behind one bounded-queue submit
+    path (``--queue-limit``), with FIFO or priority/deadline admission
+    (``--admission slo``) and the open-loop trace replay as the
+    request stream.
 
 Request streams: all-at-once (default), a Poisson arrival stream
 (``--arrival-rate`` requests/s), or a recorded JSON trace
-(``--trace-file``: list of {arrival_s, prompt_len, max_new, eos_id}).
-With an arrival stream both drivers replay the same trace, so their
-latency percentiles are comparable.
+(``--trace-file``: list of {arrival_s, prompt_len, max_new, eos_id}
+plus optional {priority, deadline_s} SLO fields).  With an arrival
+stream all drivers replay the same trace, so their latency percentiles
+are comparable.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --smoke --requests 16 --prompt-len 32 --max-new 16 --packed base3 \
       --continuous --slots 8 --chunk 8 --arrival-rate 50
+
+  PYTHONPATH=src python -m repro.launch.serve --frontend \
+      --frontend-models internlm2-1.8b,qwen3-14b --smoke --requests 16 \
+      --admission slo --deadline-s 0.5 --arrival-rate 50
 """
 from __future__ import annotations
 
@@ -67,9 +78,11 @@ def main(argv=None):
                         "--max-batch)")
     p.add_argument("--chunk", type=int, default=8,
                    help="decode steps per scheduling round (host yield)")
-    p.add_argument("--kv", default="dense", choices=("dense", "paged"),
-                   help="--continuous KV layout: dense per-slot caches "
-                        "or the paged, prefix-shared block pool")
+    p.add_argument("--kv", default=None, choices=("dense", "paged"),
+                   help="--continuous/--frontend KV layout: dense "
+                        "per-slot caches or the paged, prefix-shared "
+                        "block pool (default: dense for --continuous, "
+                        "paged for --frontend pools)")
     p.add_argument("--page-size", type=int, default=16,
                    help="positions per KV page for --kv paged")
     p.add_argument("--num-pages", type=int, default=0,
@@ -84,11 +97,45 @@ def main(argv=None):
                    help="JSON arrival trace: list of {arrival_s, "
                         "prompt_len, max_new, eos_id} (overrides "
                         "--requests/--prompt-len/--max-new/--arrival-rate)")
+    p.add_argument("--frontend", action="store_true",
+                   help="serve through the SLO-aware front-end "
+                        "(repro.frontend): model registry + bounded "
+                        "queue + admission policy + open-loop replay")
+    p.add_argument("--frontend-models", default=None, metavar="A,B",
+                   help="comma-separated architecture names to "
+                        "register as front-end pools (default: --arch)")
+    p.add_argument("--queue-limit", type=int, default=64,
+                   help="--frontend pending-queue bound; past it "
+                        "submits are rejected with 'queue-full'")
+    p.add_argument("--admission", default="fifo",
+                   choices=("fifo", "slo"),
+                   help="--frontend admission policy: fifo, or slo "
+                        "(priority classes + earliest-deadline-first "
+                        "+ shedding of unmeetable requests)")
+    p.add_argument("--deadline-s", type=float, default=0.0,
+                   help="--frontend relative completion budget applied "
+                        "to every generated request (0 = no deadline; "
+                        "a --trace-file's per-record deadline_s wins)")
+    p.add_argument("--service-floor-s", type=float, default=0.0,
+                   help="--admission slo minimum-service estimate: "
+                        "pending requests whose deadline cannot be met "
+                        "within it are shed")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
-    if args.kv == "paged" and not args.continuous:
-        p.error("--kv paged requires --continuous (the paged pool is a "
-                "continuous-batching slot-pool layout)")
+    kv = args.kv or ("paged" if args.frontend else "dense")
+    if kv == "paged" and not (args.continuous or args.frontend):
+        p.error("--kv paged requires --continuous or --frontend (the "
+                "paged pool is a slot-pool layout)")
+    if args.frontend and args.continuous:
+        p.error("--frontend drives its registry's scheduler pools "
+                "itself; drop --continuous")
+    if args.frontend and (args.packed or args.fidelity == "device"):
+        p.error("--frontend pools serve float weights through the "
+                "model registry; packed/device-fidelity serving is the "
+                "bucket/--continuous path")
+    if args.frontend and args.legacy_loop:
+        p.error("--frontend has no legacy per-step loop; its pools are "
+                "chunked schedulers")
     if args.fidelity == "device" and not args.packed:
         p.error("--fidelity device requires --packed (the device model "
                 "faults packed ternary weights; float serving has no "
@@ -96,6 +143,9 @@ def main(argv=None):
     if args.fidelity == "device" and not args.continuous:
         p.error("--fidelity device requires --continuous (drift + "
                 "restore-scrub are per-chunk hooks of the Scheduler)")
+
+    if args.frontend:
+        return _run_frontend(args, kv)
 
     from repro import configs
     from repro.core.cim_linear import CIMConfig, hbm_bytes, ternarize_params
@@ -148,7 +198,7 @@ def main(argv=None):
                                     seed=args.seed)
         trace = make_trace(arrivals, [args.prompt_len], [args.max_new])
 
-    if args.continuous and args.kv == "paged":
+    if args.continuous and kv == "paged":
         eng = PagedScheduler(model, params, capacity=args.capacity,
                              slots=args.slots or args.max_batch,
                              chunk=args.chunk, page_size=args.page_size,
@@ -205,7 +255,7 @@ def main(argv=None):
             out.update(scrubs=eng.scrubs_run,
                        adc_clip_lo=eng.adc_clip_lo,
                        adc_clip_hi=eng.adc_clip_hi)
-        if args.kv == "paged":
+        if kv == "paged":
             out.update(kv="paged", page_size=eng.page_size,
                        num_pages=eng.num_pages,
                        pages_in_use_peak=eng.allocator.peak_in_use,
@@ -214,6 +264,46 @@ def main(argv=None):
                        prefix_hit_rate=round(eng.prefix_hit_rate, 3))
     else:
         out["decode_loop"] = "legacy" if args.legacy_loop else "device"
+    print(json.dumps(out))
+
+
+def _run_frontend(args, kv: str) -> None:
+    """The --frontend mode: registry + bounded-queue server + open-loop
+    replay, reporting the load-harness stats (goodput, TTFT, latency
+    split) plus the registry capacity report."""
+    from repro.frontend import (FIFOAdmission, FrontendServer,
+                                ModelRegistry, ModelSpec, SLOAdmission,
+                                replay, trace_requests)
+    from repro.serve import load_trace, make_trace, poisson_arrivals
+
+    names = [m.strip()
+             for m in (args.frontend_models or args.arch).split(",")
+             if m.strip()]
+    reg = ModelRegistry()
+    for name in names:
+        reg.register(ModelSpec(
+            name=name, arch=name, smoke=args.smoke, kind=kv,
+            capacity=args.capacity, slots=args.slots or args.max_batch,
+            chunk=args.chunk, page_size=args.page_size,
+            num_pages=args.num_pages or None, seed=args.seed))
+
+    if args.trace_file:
+        trace = load_trace(args.trace_file)
+    else:
+        arrivals = poisson_arrivals(args.requests, args.arrival_rate,
+                                    seed=args.seed)
+        trace = make_trace(arrivals, [args.prompt_len], [args.max_new],
+                           deadlines=[args.deadline_s or None])
+    records = trace_requests(trace, reg, names, seed=args.seed)
+
+    policy = (SLOAdmission(service_floor_s=args.service_floor_s)
+              if args.admission == "slo" else FIFOAdmission())
+    server = FrontendServer(reg, policy, queue_limit=args.queue_limit)
+    report = replay(server, records)
+    out = {"decode_loop": "frontend", "models": names,
+           "admission": policy.name, "queue_limit": args.queue_limit,
+           "kv": kv, **report,
+           "capacity_report": reg.capacity_report()}
     print(json.dumps(out))
 
 

@@ -5,4 +5,5 @@ from .engine import (ServeEngine, Scheduler, PagedScheduler, Request,
                      make_paged_admit_fn, init_slot_pool, latency_stats,
                      percentile, greedy_sample)  # noqa: F401
 from .trace import (poisson_arrivals, bursty_arrivals, make_trace,
-                    load_trace)  # noqa: F401
+                    load_trace, save_trace, validate_trace,
+                    TraceError)  # noqa: F401

@@ -366,9 +366,18 @@ class Request:
     max_new: int = 16
     eos_id: int = -1                 # -1: never
     arrival_s: float = 0.0           # offset from serve start (traces)
+    priority: int = 0                # SLO class: lower is more urgent
+    deadline_s: Optional[float] = None   # RELATIVE completion budget
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     latency_s: float = 0.0           # trace runs: completion - arrival
+    admit_s: float = 0.0             # trace runs: admission - serve start
+
+    @property
+    def deadline_met(self) -> bool:
+        """True when the request carries no deadline or completed
+        within its relative budget (latency_s <= deadline_s)."""
+        return self.deadline_s is None or self.latency_s <= self.deadline_s
 
 
 def _batch_inputs(reqs: list, extra_inputs: dict) -> dict:
@@ -390,14 +399,33 @@ def percentile(vals: list, q: float) -> float:
 
 
 def latency_stats(reqs: list) -> dict:
-    """p50/p99/mean request latency (trace runs: completion - arrival);
-    percentiles interpolate between order statistics (``percentile``)."""
+    """p50/p99/p999/mean request latency (trace runs: completion -
+    arrival; percentiles interpolate between order statistics,
+    ``percentile``) plus the queue-wait vs service-time breakdown:
+    ``queue_wait_*`` is arrival -> admission (``admit_s - arrival_s``,
+    clamped into [0, latency] — engines that admit instantly report 0)
+    and ``service_*`` is admission -> completion (the remainder), so
+    an overloaded trace shows WHERE latency went — waiting for a slot
+    or decoding."""
+    zero = {"p50_s": 0.0, "p99_s": 0.0, "p999_s": 0.0, "mean_s": 0.0,
+            "queue_wait_mean_s": 0.0, "queue_wait_p99_s": 0.0,
+            "service_mean_s": 0.0, "service_p99_s": 0.0}
+    if not reqs:
+        return zero
     lat = sorted(r.latency_s for r in reqs)
-    if not lat:
-        return {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+    waits = sorted(min(max(r.admit_s - r.arrival_s, 0.0), r.latency_s)
+                   for r in reqs)
+    service = sorted(max(r.latency_s
+                         - min(max(r.admit_s - r.arrival_s, 0.0),
+                               r.latency_s), 0.0) for r in reqs)
     return {"p50_s": round(percentile(lat, 0.50), 4),
             "p99_s": round(percentile(lat, 0.99), 4),
-            "mean_s": round(sum(lat) / len(lat), 4)}
+            "p999_s": round(percentile(lat, 0.999), 4),
+            "mean_s": round(sum(lat) / len(lat), 4),
+            "queue_wait_mean_s": round(sum(waits) / len(waits), 4),
+            "queue_wait_p99_s": round(percentile(waits, 0.99), 4),
+            "service_mean_s": round(sum(service) / len(service), 4),
+            "service_p99_s": round(percentile(service, 0.99), 4)}
 
 
 class _EngineBase:
@@ -451,10 +479,12 @@ class _EngineBase:
         clock semantics both drivers inherit (the serve_continuous
         bench compares their latencies, so they must not drift):
         FIFO-sort the queue by (arrival_s, uid), offer arrived requests
-        to `try_admit` (return False to defer — e.g. no free slot),
-        sleep to the next arrival when nothing is `busy`, otherwise run
-        one `serve_round(elapsed)`.  `serve_round` stamps `latency_s`
-        as elapsed() - arrival_s (queue wait included)."""
+        to `try_admit(req, now)` (return False to defer — e.g. no free
+        slot; on success the admitter stamps `admit_s` so latency_stats
+        can split queue wait from service time), sleep to the next
+        arrival when nothing is `busy`, otherwise run one
+        `serve_round(elapsed)`.  `serve_round` stamps `latency_s` as
+        elapsed() - arrival_s (queue wait included)."""
         pending = sorted(self.queue, key=lambda r: (r.arrival_s, r.uid))
         self.queue = []
         t0 = clock()
@@ -462,7 +492,7 @@ class _EngineBase:
         while pending or busy():
             now = elapsed()
             while pending and pending[0].arrival_s <= now:
-                if not try_admit(pending[0]):
+                if not try_admit(pending[0], now):
                     break
                 pending.pop(0)
             if not busy():
@@ -578,12 +608,17 @@ class ServeEngine(_EngineBase):
         run_bucket = (self._run_bucket_device if self.on_device_loop
                       else self._run_bucket_legacy)
 
-        def admit(req):
+        def admit(req, now):
             self.queue.append(req)
             return True
 
         def serve_round(elapsed):
             reqs = self._next_bucket()
+            # the bucket driver's real admission is the bucket pop —
+            # a request "waits" until its bucket starts serving
+            admit_t = elapsed()
+            for r in reqs:
+                r.admit_s = admit_t
             run_bucket(reqs)
             done_t = elapsed()
             for r in reqs:
@@ -798,22 +833,45 @@ class Scheduler(_EngineBase):
                 self._retire_slot(s)
         self._maybe_scrub()
 
+    # ------------------------------------------------- external pump
+    # The front-end (repro.frontend.server) drives the scheduler
+    # through these three instead of run(): it owns the arrival loop
+    # (bounded queue, SLO admission order) but MUST reuse the same
+    # admission/round machinery so tokens and the one-transfer-per-
+    # chunk contract are identical to a direct run().
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self._slot_req) if r is None]
+
+    def is_busy(self) -> bool:
+        return any(r is not None for r in self._slot_req)
+
+    def try_admit(self, req: Request, now: float = 0.0) -> bool:
+        """Offer one request to the first free slot; False defers it
+        (pool full — or, paged, page reservation not coverable yet).
+        Stamps ``admit_s`` on success."""
+        free = self.free_slots()
+        if not free:
+            return False
+        if not self._admit(req, free[0]):
+            return False
+        req.admit_s = now
+        return True
+
+    def step_round(self, elapsed) -> None:
+        """Run ONE scheduling round (<= chunk decode steps, exactly one
+        device->host transfer); ``elapsed()`` is the caller's serve
+        clock, used to stamp completion latencies."""
+        self._serve_round(elapsed)
+
     def run(self) -> list[Request]:
         """Serve the whole queue continuously (the shared
         ``_arrival_pump``); returns completed requests."""
-        def admit(req):
-            # oldest arrived request into the first free slot, FIFO;
-            # defer admission (False) when the pool is full — or, paged,
-            # when the page pool cannot cover the request yet
-            free = [i for i, r in enumerate(self._slot_req) if r is None]
-            if not free:
-                return False
-            return self._admit(req, free[0])
-
-        def busy():
-            return any(r is not None for r in self._slot_req)
-
-        return self._arrival_pump(self._clock, self._sleep, admit, busy,
+        # oldest arrived request into the first free slot, FIFO; defer
+        # admission (False) when the pool is full — or, paged, when the
+        # page pool cannot cover the request yet
+        return self._arrival_pump(self._clock, self._sleep,
+                                  self.try_admit, self.is_busy,
                                   self._serve_round)
 
     @property

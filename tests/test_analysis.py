@@ -8,8 +8,10 @@
   * ``analysis.sanitize()`` enforces the serve transfer/retrace
     contract around ``Scheduler``/``PagedScheduler``: exactly one
     device->host transfer per chunk, zero retraces after warmup;
-  * lint rules RA000-RA004 fire (and suppress) on the exact shapes
-    they document;
+  * lint rules RA000-RA005 fire (and suppress) on the exact shapes
+    they document (RA005 only inside ``src/repro/frontend/``);
+  * the ``frontend`` pass catches each seeded violation (extra
+    transfer, dropped accounting, perturbed admission order);
   * kernel-registry mutation edges: ``override=True`` replacement,
     unknown unregister, and plan-cache invalidation (stale plans must
     not resolve to — or execute on — an unregistered backend).
@@ -342,6 +344,98 @@ def test_cli_lint_violation_exits_nonzero(tmp_path):
         "try:\n    pass\nexcept Exception:\n    pass\n")
     assert cli_main(["--passes", "lint",
                      "--lint-paths", str(tmp_path)]) != 0
+
+
+# ------------------------------------------------- RA005: frontend purity
+
+FRONTEND_REL = "src/repro/frontend/x.py"
+
+
+def test_ra005_device_get_banned_even_in_chokepoint(tmp_path):
+    src = """\
+        import jax
+        def _device_get(x):
+            return jax.device_get(x)
+        """
+    fs = _lint(tmp_path, src, rel_path=FRONTEND_REL)
+    assert [f.rule for f in fs] == ["RA005"]
+    assert "per-chunk payload" in fs[0].message
+    # outside the frontend the audited chokepoint idiom stays legal
+    assert _lint(tmp_path, src, rel_path="src/repro/serve/x.py") == []
+
+
+def test_ra005_from_import_device_get(tmp_path):
+    fs = _lint(tmp_path, "from jax import device_get\n",
+               rel_path=FRONTEND_REL)
+    assert [f.rule for f in fs] == ["RA005"]
+
+
+def test_ra005_wallclock_calls_vs_injectable_default(tmp_path):
+    src = """\
+        import time
+        def bad():
+            return time.monotonic()
+        def worse():
+            return time.perf_counter_ns()
+        def ok(clock=time.monotonic):
+            return clock()
+        """
+    fs = _lint(tmp_path, src, rel_path=FRONTEND_REL)
+    assert [f.rule for f in fs] == ["RA005"] * 2
+    assert all("inject" in f.message for f in fs)
+    # wall-clock hygiene is a frontend-only contract
+    assert _lint(tmp_path, src, rel_path="src/repro/serve/x.py") == []
+
+
+def test_ra005_rng_and_unbounded_deque(tmp_path):
+    src = """\
+        import random
+        from collections import deque
+        import numpy as np
+        def f():
+            a = np.random.randn(3)
+            b = random.random()
+            c = np.random.default_rng()
+            q = deque()
+            ok = np.random.default_rng(0)
+            ok2 = deque(maxlen=8)
+            ok3 = deque([1, 2], 2)
+            return a, b, c, q, ok, ok2, ok3
+        """
+    fs = _lint(tmp_path, src, rel_path=FRONTEND_REL)
+    assert [f.rule for f in fs] == ["RA005"] * 4
+    assert _lint(tmp_path, src, rel_path="src/repro/serve/x.py") == []
+
+
+# ------------------------------------------------- frontend pass
+
+def test_frontend_pass_clean():
+    from repro.analysis import frontend
+    assert frontend.run() == []
+
+
+def test_frontend_pass_catches_injected_transfer():
+    from repro.analysis import frontend
+    fs = frontend._check_streaming(inject=("transfer",))
+    assert fs and all(f.rule == "FE001" for f in fs)
+
+
+def test_frontend_pass_catches_dropped_accounting():
+    from repro.analysis import frontend
+    fs = frontend._check_backpressure(inject=("drop",))
+    assert fs and all(f.rule == "FE002" for f in fs)
+    assert any("silently dropped" in f.message for f in fs)
+
+
+def test_frontend_pass_catches_perturbed_admission_order():
+    from repro.analysis import frontend
+    fs = frontend._check_determinism(inject=("order",))
+    assert any(f.rule == "FE003" and "diverge" in f.message for f in fs)
+
+
+def test_cli_frontend_injection_exits_nonzero():
+    assert cli_main(["--passes", "frontend",
+                     "--inject-frontend", "drop"]) != 0
 
 
 # ------------------------------------------------- lint config hygiene

@@ -155,11 +155,12 @@ def test_load_trace_roundtrip(tmp_path):
     path = os.path.join(tmp_path, "trace.json")
     with open(path, "w") as f:
         json.dump([{"arrival_s": 0.5, "prompt_len": 8, "max_new": 3},
-                   {"max_new": 2}], f)
+                   {"arrival_s": 0.7, "prompt_len": 4, "max_new": 2,
+                    "priority": 1, "deadline_s": 0.25}], f)
     trace = load_trace(path)
     assert trace[0] == {"arrival_s": 0.5, "prompt_len": 8, "max_new": 3,
-                        "eos_id": -1}
-    assert trace[1]["prompt_len"] == 32 and trace[1]["arrival_s"] == 0.0
+                        "eos_id": -1, "priority": 0, "deadline_s": None}
+    assert trace[1]["priority"] == 1 and trace[1]["deadline_s"] == 0.25
 
 
 # ------------------------------------------------- transfer accounting

@@ -133,8 +133,12 @@ def test_latency_stats_interpolates_percentiles():
     assert s["p50_s"] == 5.0             # interpolated midpoint
     assert s["p99_s"] == 9.9
 
-    assert stats([7.0]) == {"p50_s": 7.0, "p99_s": 7.0, "mean_s": 7.0}
-    assert stats([]) == {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+    one = stats([7.0])
+    assert (one["p50_s"], one["p99_s"], one["p999_s"], one["mean_s"]) \
+        == (7.0, 7.0, 7.0, 7.0)
+    assert one["queue_wait_mean_s"] == 0.0 and one["service_mean_s"] == 7.0
+    empty = stats([])
+    assert set(empty) == set(one) and set(empty.values()) == {0.0}
 
     lat = sorted([3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.3, 5.8])
     assert percentile(lat, 0.0) == lat[0]

@@ -26,11 +26,15 @@ ci: analyze test bench bench-compare
 
 # static contract checker + sanitizer (src/repro/analysis/README.md):
 # capability lattice vs the kernels README matrix, pallas block/index
-# maps, the serve transfer/retrace contract, and the AST lint — exits
-# nonzero on any finding. Same offline fake-device env as the tests.
+# maps, the sharding-contract prover, the jaxpr dataflow audit, the
+# serve transfer/retrace contract, and the AST lint — exits nonzero on
+# any finding, and writes the machine-readable findings document (the
+# CI artifact). Same offline fake-device env as the tests.
 analyze:
+	mkdir -p experiments/analysis
 	XLA_FLAGS="--xla_force_host_platform_device_count=$(XLA_DEVICES)" \
-	    PYTHONPATH=src python -m repro.analysis
+	    PYTHONPATH=src python -m repro.analysis \
+	    --out experiments/analysis/findings.json
 
 # perf-trajectory benchmarks (kernel_bench + wallclock, reduced sweeps)
 # under the same 8-fake-device env as the tests; fails if the tracked

@@ -1,7 +1,7 @@
-"""Static contract checker + sanitizer for plans, kernels, and serve
-loops (`python -m repro.analysis`, `make analyze`).
+"""Static contract checker + sanitizer for plans, kernels, sharding
+rules, and serve loops (`python -m repro.analysis`, `make analyze`).
 
-Six passes, each a ``run() -> list[Finding]``:
+Eight passes, each a ``run() -> list[Finding]``:
 
   * ``capability`` — the (op x backend x domain x packing x kv_layout
     x platform) lattice from the live kernel registry: declared cells
@@ -15,36 +15,61 @@ Six passes, each a ``run() -> list[Finding]``:
     invariants, duplicate cells, current-platform sweep coverage, and
     canonical serialization.  The runtime loader degrades quietly to
     the heuristic; this pass is where a doctored table fails loudly.
+  * ``lint`` — AST rules for the standing constraints (no blind
+    except swallows, no device_get outside the audited chokepoint, no
+    routing kwargs around the plan API, no unseeded benchmark RNG, and
+    the front-end purity rules of RA005), plus the dead-suppression
+    audit: an ``# lint: allow`` or rules.toml entry matching no
+    finding is itself a finding.
+  * ``shard`` — the sharding-contract prover: every (rules variant x
+    mesh x model config) cell of the live ``dist.variants`` lattice
+    resolves abstractly, resolved specs re-verify independently, no
+    large parameter replicates on a multi-chip mesh, the
+    slot/page-pool mirrors agree with the engine, every logical axis
+    named in ``src/`` is known, and the dist/README axis table
+    matches.
+  * ``jaxpr`` — static dataflow audit of the audited jitted entry
+    points (serve/train/frontend manifests): declared donations
+    actually alias, no f64/weak-type widening, no callback primitives,
+    and the transfer contract holds in the closed jaxpr.
   * ``sanitize`` — the serve transfer/retrace contract: exactly one
     device->host transfer per chunk, zero retraces after warmup, on
     both ``Scheduler`` and ``PagedScheduler``.  The :func:`sanitize`
     context manager is also importable for tests.
-  * ``lint`` — AST rules for the standing constraints (no blind
-    except swallows, no device_get outside the audited chokepoint, no
-    routing kwargs around the plan API, no unseeded benchmark RNG, and
-    the front-end purity rules of RA005).
   * ``frontend`` — the serving front-end's dynamic contracts:
     streaming adds zero transfers (one per chunk survives the
     front-end), the pending queue stays bounded with every reject
     accounted, and admission replays deterministically under a virtual
     clock.
 
+The ``shard`` and ``jaxpr`` passes share one abstract-eval cache
+(:mod:`.abscache`) so model definitions are built once per run.
+
 Rule catalog and suppression syntax: src/repro/analysis/README.md.
 """
 from .base import Finding, rel  # noqa: F401
 from .sanitizer import (SanitizeError, SanitizeReport,  # noqa: F401
                         sanitize)
-from . import (autotune_table, blockmap, capability,  # noqa: F401
-               frontend, lint, sanitizer)
+from . import (abscache, autotune_table, blockmap,  # noqa: F401
+               capability, frontend, jaxpr_audit, lint, sanitizer,
+               shardspec)
 
 # CLI/run order: cheap static passes first, the model-building
-# dynamic passes last
+# dynamic passes last (shard/jaxpr are static but build abstract
+# models, so they sit between the pure-AST passes and the dynamic
+# smoke drivers)
 PASSES = (("capability", capability.run),
           ("blockmap", blockmap.run),
           ("autotune", autotune_table.run),
           ("lint", lint.run),
+          ("shard", shardspec.run),
+          ("jaxpr", jaxpr_audit.run),
           ("sanitize", sanitizer.run),
           ("frontend", frontend.run))
+
+# pass name -> wall seconds of the most recent run in this process
+# (the CLI records these; `--list` reports them)
+LAST_TIMINGS: dict = {}
 
 
 def run_all() -> list:

@@ -3,15 +3,33 @@
 Exit status is the number of findings (capped at 125), so any
 violation fails CI.  ``--inject-*`` / ``--pin-blocks`` seed violations
 on purpose — they exist so tests (and curious humans) can watch each
-pass actually catch its failure category.
+pass actually catch its failure category.  ``--format json`` /
+``--out PATH`` emit a machine-readable findings document (pass, rule,
+where, message, per-pass wall time) for the CI artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 
-from . import (PASSES, autotune_table, blockmap, capability, frontend,
-               lint, sanitizer)
+from . import (LAST_TIMINGS, PASSES, abscache, autotune_table,
+               blockmap, capability, frontend, jaxpr_audit, lint,
+               sanitizer, shardspec)
+
+
+def _report_doc(per_pass: list, findings: list) -> dict:
+    return {
+        "passes": [{"name": name, "findings": n,
+                    "seconds": round(dt, 3)}
+                   for name, n, dt in per_pass],
+        "findings": [{"pass": f.passname, "rule": f.rule,
+                      "where": f.where, "message": f.message}
+                     for f in findings],
+        "ok": not findings,
+        "abscache": abscache.stats(),
+    }
 
 
 def main(argv=None) -> int:
@@ -21,17 +39,32 @@ def main(argv=None) -> int:
                     "(src/repro/analysis/README.md)")
     p.add_argument("--passes", default=None,
                    help="comma-separated subset to run (capability,"
-                        "blockmap,autotune,lint,sanitize,frontend); "
-                        "default all")
+                        "blockmap,autotune,lint,shard,jaxpr,sanitize,"
+                        "frontend); default all")
     p.add_argument("--list", action="store_true",
-                   help="list passes and exit")
+                   help="list passes (with last-run wall times, when "
+                        "run in this process) and exit")
+    p.add_argument("--format", default="text", choices=("text", "json"),
+                   dest="fmt",
+                   help="stdout format: human text or the findings "
+                        "JSON document")
+    p.add_argument("--out", default=None, metavar="PATH",
+                   help="also write the findings JSON document here "
+                        "(the CI artifact)")
     p.add_argument("--emit-matrix", action="store_true",
                    help="print the registry-derived capability matrix "
                         "markdown (paste into src/repro/kernels/"
                         "README.md) and exit")
+    p.add_argument("--emit-axes", action="store_true",
+                   help="print the rules-derived logical-axis table "
+                        "markdown (paste into src/repro/dist/"
+                        "README.md) and exit")
     p.add_argument("--readme", default=None, metavar="PATH",
                    help="capability pass: check this README instead of "
                         "src/repro/kernels/README.md")
+    p.add_argument("--dist-readme", default=None, metavar="PATH",
+                   help="shard pass: check this README instead of "
+                        "src/repro/dist/README.md")
     p.add_argument("--autotune-table", default=None, metavar="PATH",
                    help="autotune pass: check this table instead of "
                         "BENCH_autotune.json (violation injection)")
@@ -39,6 +72,16 @@ def main(argv=None) -> int:
                    help="blockmap pass: force these block shapes over "
                         "the sweep instead of select_block_shapes "
                         "(violation injection)")
+    p.add_argument("--inject-shard", default=None,
+                   choices=("resolve", "spec", "replicate", "mirror",
+                            "axis", "drift"),
+                   help="shard pass: seed one sharding-contract "
+                        "violation (violation injection)")
+    p.add_argument("--inject-jaxpr", default=None,
+                   choices=("donation", "widen", "callback",
+                            "transfer"),
+                   help="jaxpr pass: seed one dataflow-audit "
+                        "violation (violation injection)")
     p.add_argument("--inject-sanitize", default=None,
                    choices=("transfer", "retrace"),
                    help="sanitize pass: seed an extra device->host "
@@ -59,10 +102,15 @@ def main(argv=None) -> int:
 
     if args.list:
         for name, _ in PASSES:
-            print(name)
+            dt = LAST_TIMINGS.get(name)
+            stamp = f"{dt:8.2f}s" if dt is not None else "       -"
+            print(f"{name:12s}{stamp}")
         return 0
     if args.emit_matrix:
         print(capability.render_capability_matrix(), end="")
+        return 0
+    if args.emit_axes:
+        print(shardspec.render_axis_table(), end="")
         return 0
 
     selected = ([s.strip() for s in args.passes.split(",") if s.strip()]
@@ -90,6 +138,9 @@ def main(argv=None) -> int:
             paths=([s.strip() for s in args.lint_paths.split(",")]
                    if args.lint_paths else None),
             config=args.rules),
+        "shard": lambda: shardspec.run(
+            inject=args.inject_shard, readme_path=args.dist_readme),
+        "jaxpr": lambda: jaxpr_audit.run(inject=args.inject_jaxpr),
         "sanitize": lambda: sanitizer.run(
             inject=(args.inject_sanitize,) if args.inject_sanitize
             else ()),
@@ -98,19 +149,35 @@ def main(argv=None) -> int:
             else ()),
     }
 
+    text = args.fmt == "text"
     findings = []
+    per_pass = []
     for name, _ in PASSES:          # canonical order, subset-filtered
         if name not in selected:
             continue
+        t0 = time.monotonic()
         got = runners[name]()
-        print(f"[{name}] {len(got)} finding(s)")
+        dt = time.monotonic() - t0
+        LAST_TIMINGS[name] = dt
+        per_pass.append((name, len(got), dt))
+        if text:
+            print(f"[{name}] {len(got)} finding(s) ({dt:.2f}s)")
         findings.extend(got)
-    for f in findings:
-        print(f" {f}")
-    if findings:
-        print(f"FAIL: {len(findings)} finding(s)")
+    doc = _report_doc(per_pass, findings)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+    if text:
+        for f in findings:
+            print(f" {f}")
+        if findings:
+            print(f"FAIL: {len(findings)} finding(s)")
+        else:
+            print("OK: all passes clean")
     else:
-        print("OK: all passes clean")
+        json.dump(doc, sys.stdout, indent=1)
+        print()
     return min(len(findings), 125)
 
 

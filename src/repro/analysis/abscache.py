@@ -1,0 +1,90 @@
+"""Shared abstract-eval cache for the shard + jaxpr passes.
+
+Both new static passes work entirely on abstract values — ParamDef
+trees, ShapeDtypeStructs, closed jaxprs — and both need the same
+expensive-to-build objects: model definitions per architecture and the
+reduced smoke model the jitted entry points are traced against.  This
+module memoizes them so one `make analyze` run builds each exactly
+once no matter how many passes (or injection reruns in tests) consume
+them; ``stats()`` exposes the hit counts the CLI surfaces next to the
+per-pass timings.
+
+Nothing here allocates device memory: models are definition objects,
+"params"/"caches" are ShapeDtypeStructs, and tracing happens under
+``jax.eval_shape``-equivalent machinery in the passes themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ParamDef, abstract_params, is_def
+
+# The reduced architecture the jaxpr pass traces entry points against —
+# same one the sanitize/frontend passes drive dynamically, in f32 so
+# dtype-discipline findings are real promotions, not bf16 casts.
+SMOKE_ARCH = "internlm2-1.8b"
+
+
+@lru_cache(maxsize=None)
+def config(arch: str):
+    from repro import configs
+    return configs.get(arch)
+
+
+@lru_cache(maxsize=None)
+def model(arch: str):
+    """Full-size model object (ParamDef/cache_defs only; no weights)."""
+    from repro.models import registry
+    return registry.build(config(arch))
+
+
+@lru_cache(maxsize=None)
+def smoke_model():
+    from repro import configs
+    from repro.models import registry
+    cfg = dataclasses.replace(configs.smoke(SMOKE_ARCH),
+                              dtype=jnp.float32)
+    return registry.build(cfg)
+
+
+def _named_leaves(defs: Any) -> tuple:
+    leaves = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)[0]
+    return tuple((jax.tree_util.keystr(path), leaf)
+                 for path, leaf in leaves if isinstance(leaf, ParamDef))
+
+
+@lru_cache(maxsize=None)
+def param_leaves(arch: str) -> tuple:
+    """((keypath, ParamDef), ...) for one architecture's parameters."""
+    return _named_leaves(model(arch).param_defs)
+
+
+@lru_cache(maxsize=None)
+def cache_leaves(arch: str, batch: int, capacity: int) -> tuple:
+    """((keypath, ParamDef), ...) for the decode-state defs."""
+    return _named_leaves(model(arch).cache_defs(batch, capacity))
+
+
+def abstract(defs: Any, dtype=jnp.float32) -> Any:
+    """ParamDef tree -> plain ShapeDtypeStructs (no shardings)."""
+    return abstract_params(defs, dtype)
+
+
+def stats() -> dict:
+    """Per-entry lru_cache counters (the CLI's cache-sharing report)."""
+    out = {}
+    for fn in (config, model, smoke_model, param_leaves, cache_leaves):
+        info = fn.cache_info()
+        out[fn.__name__] = {"hits": info.hits, "misses": info.misses,
+                            "size": info.currsize}
+    return out
+
+
+def clear() -> None:
+    for fn in (config, model, smoke_model, param_leaves, cache_leaves):
+        fn.cache_clear()

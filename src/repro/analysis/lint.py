@@ -50,6 +50,14 @@ Suppressions:
         reason = "one-line reason"
 
     Wildcard rules and empty reasons are rejected (RA000).
+
+  Suppressions are audited, not trusted: an inline ``# lint: allow``
+  whose line has no matching finding, or a ``[[suppress]]`` entry that
+  matched nothing anywhere under the scanned trees, is itself an RA000
+  finding — stale suppressions would otherwise silently mask the next
+  real violation at that site.  Config entries whose path lies outside
+  the scanned trees are left alone (a ``--lint-paths`` subset run must
+  not declare repo-wide suppressions dead).
 """
 from __future__ import annotations
 
@@ -166,7 +174,9 @@ def _parse_toml(text: str, path: str, findings: list) -> dict:
 
 def load_config(path: str, findings: list) -> dict:
     """Parse + validate rules.toml; config errors become RA000
-    findings.  Returns {'paths': [...], 'suppress': [(rule, path), ...]}."""
+    findings.  Returns {'paths': [...],
+    'suppress': [(rule, path, where), ...]} — ``where`` locates the
+    entry for the dead-suppression audit."""
     cfg = {"paths": list(DEFAULT_PATHS), "suppress": []}
     if not os.path.exists(path):
         return cfg
@@ -195,7 +205,7 @@ def load_config(path: str, findings: list) -> dict:
                 PASS, "RA000", where,
                 "suppression needs a one-line reason"))
             continue
-        cfg["suppress"].append((rule, spath))
+        cfg["suppress"].append((rule, spath, where))
     return cfg
 
 
@@ -459,11 +469,23 @@ def check_file(path: str, rel_path: Optional[str] = None) -> list:
     visitor = _Visitor(rel_path, in_benchmarks, ra003_exempt,
                        in_frontend)
     visitor.visit(tree)
+    used: set = set()
     for f in visitor.findings:
         lineno = int(f.where.rsplit(":", 1)[1])
         if f.rule in allowed.get(lineno, ()):
+            used.add((lineno, f.rule))
             continue
         findings.append(f)
+    # dead-suppression audit: an allow that matched nothing is masking
+    # a violation that no longer exists — and would silently mask the
+    # next one introduced on that line
+    for lineno in sorted(allowed):
+        for rule in sorted(allowed[lineno]):
+            if (lineno, rule) not in used:
+                findings.append(Finding(
+                    PASS, "RA000", f"{rel_path}:{lineno}",
+                    f"dead suppression: no {rule} finding on this "
+                    f"line; delete the '# lint: allow' comment"))
     return findings
 
 
@@ -490,13 +512,30 @@ def run(paths=None, config: Optional[str] = None) -> list:
                       findings)
     scan = list(paths) if paths is not None else cfg["paths"]
     suppress = cfg["suppress"]
+    used: set = set()
     for path in _iter_py_files(scan):
         rel_path = rel(path)
         for f in check_file(path, rel_path):
-            if any(rule == f.rule
-                   and (rel_path == spath
-                        or rel_path.startswith(spath.rstrip("/") + "/"))
-                   for rule, spath in suppress):
-                continue
-            findings.append(f)
+            hit = False
+            for i, (rule, spath, _) in enumerate(suppress):
+                if rule == f.rule and (
+                        rel_path == spath
+                        or rel_path.startswith(spath.rstrip("/") + "/")):
+                    used.add(i)
+                    hit = True
+            if not hit:
+                findings.append(f)
+    # dead-suppression audit, restricted to entries whose path lies
+    # under the scanned trees — a --lint-paths subset run must not
+    # declare repo-wide suppressions dead
+    bases = [rel(os.path.join(REPO_ROOT, b)).rstrip("/") for b in scan]
+    for i, (rule, spath, where) in enumerate(suppress):
+        if i in used:
+            continue
+        norm = spath.rstrip("/")
+        if any(norm == b or norm.startswith(b + os.sep) for b in bases):
+            findings.append(Finding(
+                PASS, "RA000", where,
+                f"dead suppression: no {rule} finding under "
+                f"{spath!r}; delete the [[suppress]] entry"))
     return findings

@@ -1,8 +1,10 @@
 """Distributed execution: mesh specs + logical-axis sharding rules."""
-from . import mesh, sharding                                  # noqa: F401
+from . import mesh, sharding, variants                        # noqa: F401
 from .mesh import (MULTI_POD, SINGLE_POD, MeshSpec, make_mesh,  # noqa: F401
                    spec_for)
 from .sharding import (Rules, UnknownLogicalAxisError,        # noqa: F401
                        constrain, constrain_act, logical_to_spec,
                        named_sharding, rules_for, serve_rules,
                        set_activation_context, spec_tree, train_rules)
+from .variants import (MESHES, OVERRIDES, REPLICATING_VARIANTS,  # noqa: F401
+                       VariantCell, apply_override, enumerate_variants)

@@ -1,0 +1,91 @@
+"""The enumerable registry of sharding-rule variants.
+
+Every production placement the repo can lower is some base
+``rules_for(cfg, mode, fsdp)`` plus at most one of the named overrides
+below — the same overrides ``repro.launch.dryrun`` applies for its
+``--ep data`` / ``--pure-dp`` / ``--sp`` cells.  Keeping the override
+dicts HERE (and making dryrun consume them) is what lets the
+``shard`` analysis pass prove contracts over the live lattice instead
+of a hand-copied snapshot: a new variant added for a launch experiment
+is automatically walked by the prover on the next `make analyze`.
+
+``enumerate_variants(cfg)`` yields every (mode x fsdp x variant) cell
+for one model config; crossing that with ``MESHES`` gives the full
+placement lattice for the config.  All of it is abstract — ``Rules``
+and ``MeshSpec`` carry no devices.
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+from .mesh import MULTI_POD, SINGLE_POD, MeshSpec
+from .sharding import Rules, rules_for
+
+# name -> (Rules.with_overrides kwargs, one-line rationale).  The
+# rationale strings double as documentation in `dist/README.md` and in
+# shard-pass findings.
+OVERRIDES: dict[str, tuple[dict, str]] = {
+    "ep-data": (
+        dict(expert="data"),
+        "true EP: experts sharded over the DP axis — tokens move to "
+        "the expert owners via all-to-all instead of XLA re-gathering "
+        "the expert weights over 'data' on every use",
+    ),
+    "pure-dp": (
+        dict(batch=("pod", "data", "model"), heads=None, kv=None,
+             mlp=None, inner=None, vocab=None, expert=None,
+             embed_rp=None, head_count=None, cache_seq=None),
+        "small models on big meshes: fold the model axis into data "
+        "parallelism (1 sequence per chip) and keep weights "
+        "replicated over it",
+    ),
+    "sp": (
+        dict(seq="model"),
+        "sequence parallelism over 'model' (Megatron-SP): everything "
+        "between the TP matmuls stops being replicated 16x",
+    ),
+}
+
+# Variants whose POINT is weight replication: the shard pass skips its
+# replication-floor rule (SD003) for these, because flagging them
+# would flag the design.
+REPLICATING_VARIANTS = frozenset({"pure-dp"})
+
+# The production meshes the prover crosses the variants with.  Both
+# are abstract MeshSpecs; MULTI_POD is the 512-chip 2x16x16 pod pair.
+MESHES: tuple[MeshSpec, ...] = (SINGLE_POD, MULTI_POD)
+
+
+def apply_override(rules: Rules, name: str) -> Rules:
+    """Apply one named override variant to a base ``Rules``."""
+    try:
+        overrides, _ = OVERRIDES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown rules variant {name!r}; known: "
+            f"{sorted(OVERRIDES)}") from None
+    return rules.with_overrides(**overrides)
+
+
+class VariantCell(NamedTuple):
+    """One resolved cell of the rules lattice for a model config."""
+    mode: str          # "train" | "serve"
+    fsdp: bool
+    variant: str       # "base" or an OVERRIDES key
+    rules: Rules
+
+    @property
+    def tag(self) -> str:
+        fs = "fsdp" if self.fsdp else "nofsdp"
+        return f"{self.mode}/{fs}/{self.variant}"
+
+
+def enumerate_variants(cfg) -> Iterator[VariantCell]:
+    """Yield every (mode x fsdp x variant) rules cell for one config."""
+    for mode in ("train", "serve"):
+        for fsdp in (True, False):
+            base = rules_for(cfg, mode, fsdp=fsdp)
+            yield VariantCell(mode, fsdp, "base", base)
+            for name in OVERRIDES:
+                yield VariantCell(mode, fsdp, name,
+                                  apply_override(base, name))

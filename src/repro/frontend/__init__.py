@@ -15,3 +15,4 @@ from .registry import ModelEntry, ModelRegistry, ModelSpec  # noqa: F401
 from .server import FrontendServer, Stream  # noqa: F401
 from .loadgen import (VirtualClock, replay, replay_direct,  # noqa: F401
                       trace_requests)
+from . import manifest  # noqa: F401

@@ -1,0 +1,54 @@
+"""Audited manifest of the frontend pump's jitted surface.
+
+The :class:`FrontendServer` owns no jit of its own: ``poll()``
+advances one model's scheduler by one round (``step_round``), whose
+jitted entry is the chunked decode loop built with the
+:class:`ModelSpec` pool geometry — the default registry pool is the
+paged scheduler (``kind='paged'``).  The pump entry here traces
+exactly that loop at the ModelSpec default geometry, so the frontend's
+one-transfer-per-chunk streaming contract (FE001, dynamic) has a
+static jaxpr-level counterpart: no callback, no host transfer, no
+widening anywhere in the graph the pump dispatches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import abstract_params
+from repro.serve.manifest import AuditedEntry
+
+
+def _pump(model):
+    import dataclasses
+
+    from repro.models.paged_kv import PagedKVCache
+    from repro.serve.engine import make_paged_decode_loop
+    from .registry import ModelSpec
+
+    # the registry's default pool geometry (fields, not a guess)
+    spec_fields = {f.name: f.default
+                   for f in dataclasses.fields(ModelSpec)}
+    slots, chunk = spec_fields["slots"], spec_fields["chunk"]
+    capacity, page = spec_fields["capacity"], spec_fields["page_size"]
+    per_slot = -(-capacity // page)
+    num_pages = 1 + slots * per_slot
+
+    fn = make_paged_decode_loop(model, chunk)
+    cfg = model.cfg
+    pshape = (cfg.num_layers, num_pages, page, cfg.num_kv_heads, cfg.hd)
+    pool = PagedKVCache(jax.ShapeDtypeStruct(pshape, cfg.dtype),
+                        jax.ShapeDtypeStruct(pshape, cfg.dtype))
+    lane = lambda dt=jnp.int32: jax.ShapeDtypeStruct((slots,), dt)
+    table = jax.ShapeDtypeStruct((slots, per_slot), jnp.int32)
+    return fn, (abstract_params(model.param_defs, cfg.dtype), lane(),
+                pool, table, lane(), lane(jnp.bool_), lane(),
+                lane(jnp.bool_), lane(), lane())
+
+
+def entries() -> tuple[AuditedEntry, ...]:
+    return (
+        AuditedEntry("frontend.pump", _pump, (), 9,
+                     "the paged chunk loop as the frontend registry "
+                     "builds it — the only jit the pump dispatches"),
+    )

@@ -51,6 +51,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     from repro import configs
     from repro.configs.shapes import SHAPES, runnable
     from repro.dist import sharding as shd
+    from repro.dist import variants
     from repro.launch.input_specs import (abstract_cache,
                                           abstract_model_params,
                                           decode_loop_specs,
@@ -84,30 +85,24 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     chips = mesh.devices.size
     mode = "train" if cell.kind == "train" else "serve"
     rules = shd.rules_for(cfg, mode, fsdp=fsdp)
+    # the named overrides live in dist.variants (the registry the
+    # `shard` analysis pass proves contracts over) — applying them
+    # through apply_override keeps the dry-run and the prover on the
+    # same lattice; see each OVERRIDES entry for the rationale
     if ep == "data":
-        # true EP: experts sharded over the DP axis — tokens move to the
-        # expert owners via all-to-all instead of XLA re-gathering the
-        # (d_model-sharded) expert weights over 'data' on every use
-        rules = rules.with_overrides(expert="data")
+        rules = variants.apply_override(rules, "ep-data")
         meta["ep"] = ep
     if pure_dp:
-        # small models on big meshes: TP all-reduces dominate; fold the
-        # model axis into data parallelism (1 sequence per chip) and
-        # keep weights replicated over it (FSDP over 'data' still on)
-        rules = rules.with_overrides(
-            batch=("pod", "data", "model"), heads=None, kv=None, mlp=None,
-            inner=None, vocab=None, expert=None, embed_rp=None,
-            head_count=None, cache_seq=None)
+        rules = variants.apply_override(rules, "pure-dp")
         meta["pure_dp"] = True
     if sp:
-        # sequence parallelism over 'model' (Megatron-SP): activations
-        # shard (batch x data, seq x model).  The TP matmuls all-gather /
-        # reduce-scatter the seq axis around them (same wire bytes as the
-        # TP all-reduces they replace) but everything BETWEEN matmuls —
-        # norms, residuals, rope, and crucially ATTENTION SCORES for
-        # archs whose head count does not divide the 16-way model axis
-        # (qwen3: 40H, whisper: 20H) — stops being replicated 16x.
-        rules = rules.with_overrides(seq="model")
+        # activations shard (batch x data, seq x model): the TP matmuls
+        # all-gather / reduce-scatter the seq axis around them (same
+        # wire bytes as the TP all-reduces they replace) but norms,
+        # residuals, rope, and crucially ATTENTION SCORES for archs
+        # whose head count does not divide the 16-way model axis
+        # (qwen3: 40H, whisper: 20H) stop being replicated 16x
+        rules = variants.apply_override(rules, "sp")
         meta["sp"] = True
     shd.set_activation_context(rules, mesh)
     if cell.kind == "train" and remat != "config":

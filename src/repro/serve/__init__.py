@@ -7,3 +7,5 @@ from .engine import (ServeEngine, Scheduler, PagedScheduler, Request,
 from .trace import (poisson_arrivals, bursty_arrivals, make_trace,
                     load_trace, save_trace, validate_trace,
                     TraceError)  # noqa: F401
+from .manifest import AuditedEntry  # noqa: F401
+from . import manifest  # noqa: F401

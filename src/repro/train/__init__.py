@@ -1,2 +1,3 @@
 from .step import TrainState, make_train_step, make_abstract_state  # noqa: F401
 from .runner import Trainer, TrainerConfig, FailurePlan, SimulatedFailure  # noqa: F401
+from . import manifest  # noqa: F401

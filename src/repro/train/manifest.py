@@ -1,0 +1,40 @@
+"""Audited manifest of the training step's jitted entry point.
+
+Companion to ``repro.serve.manifest`` (same :class:`AuditedEntry`
+record): names the jitted train step for the ``jaxpr`` analysis pass.
+The TrainState donation is the one that matters at scale — a
+non-aliased donated state doubles parameter + optimizer memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import abstract_params
+from repro.serve.manifest import AuditedEntry
+
+B, S = 2, 32            # tiny trace geometry (contracts are shape-free)
+
+
+def _train_step(model):
+    from repro.optim import adamw
+    from .step import TrainState, jit_train_step, make_train_step
+
+    opt = adamw(3e-4)
+    fn = jit_train_step(make_train_step(model, opt))
+    state = TrainState(
+        abstract_params(model.param_defs, model.cfg.dtype),
+        abstract_params(opt.state_defs(model.param_defs), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32), None)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    return fn, (state, batch)
+
+
+def entries() -> tuple[AuditedEntry, ...]:
+    return (
+        AuditedEntry("train.train_step", _train_step, (0,), 2,
+                     "TrainState donated: params + optimizer state + "
+                     "step must all alias (in-place update, no 2x "
+                     "parameter memory)"),
+    )

@@ -17,6 +17,7 @@
     not resolve to — or execute on — an unregistered backend).
 """
 import dataclasses
+import json
 import textwrap
 
 import jax
@@ -24,8 +25,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro import configs
-from repro.analysis import (Finding, SanitizeError, sanitize, blockmap,
-                            capability, lint, sanitizer)
+from repro.analysis import (Finding, SanitizeError, sanitize, abscache,
+                            blockmap, capability, jaxpr_audit, lint,
+                            sanitizer, shardspec)
 from repro.analysis.__main__ import main as cli_main
 from repro.kernels import plan as plan_mod
 from repro.kernels.plan import (execute, get_backend, plan_matmul,
@@ -445,7 +447,7 @@ def test_repo_rules_toml_is_valid_and_wildcard_free():
     cfg = lint.load_config(lint.CONFIG_PATH, findings)
     assert findings == []              # every entry has rule + reason
     assert all(lint._RULE_ID_RE.match(rule)
-               for rule, _ in cfg["suppress"])
+               for rule, _, _ in cfg["suppress"])
 
 
 def test_config_rejects_wildcards_and_empty_reasons(tmp_path):
@@ -535,3 +537,179 @@ def test_plan_cache_invalidation_on_registry_mutation():
     assert plan_matmul(_SHAPE).backend == baseline
     with pytest.raises(ValueError, match="unknown backend"):
         execute(stale, jnp.ones((8, 64)), jnp.ones((64, 32)))
+
+
+# ------------------------------------------------- shard pass (SD001-SD006)
+
+_SMOKE = (abscache.SMOKE_ARCH,)
+
+
+def test_shard_pass_clean():
+    """Every (variant x mesh x arch) cell of the live lattice resolves
+    and re-verifies — on the repo as merged, with zero devices."""
+    assert shardspec.run() == []
+
+
+def test_sd001_unresolvable_axes_flagged():
+    fs = shardspec.run(inject="resolve", archs=_SMOKE)
+    assert fs and all(f.rule == "SD001" for f in fs)
+
+
+def test_sd002_invalid_spec_flagged():
+    fs = shardspec.run(inject="spec", archs=_SMOKE)
+    assert fs and all(f.rule == "SD002" for f in fs)
+
+
+def test_sd003_large_replication_flagged():
+    fs = shardspec.run(inject="replicate", archs=_SMOKE)
+    assert fs and all(f.rule == "SD003" for f in fs)
+
+
+def test_sd004_mirror_divergence_flagged():
+    fs = shardspec.run(inject="mirror", archs=_SMOKE)
+    assert fs and all(f.rule == "SD004" for f in fs)
+
+
+def test_sd005_unknown_axis_flagged():
+    fs = shardspec.run(inject="axis", archs=_SMOKE)
+    assert [f.rule for f in fs] == ["SD005"]
+    assert "embeddd" in fs[0].message
+
+
+def test_sd006_readme_drift_flagged():
+    fs = shardspec.run(inject="drift", archs=_SMOKE)
+    assert fs and all(f.rule == "SD006" for f in fs)
+
+
+def test_typod_axis_in_model_file_caught_without_devices(tmp_path):
+    """ISSUE 10 acceptance: a typo'd logical axis in a model file is a
+    finding from the static pass alone — no mesh, no device code."""
+    (tmp_path / "model.py").write_text(textwrap.dedent("""\
+        from repro.models.registry import ParamDef
+        wq = ParamDef((512, 512), ("embed", "headz"))
+        """))
+    fs = shardspec.run(scan_paths=(str(tmp_path),), archs=_SMOKE)
+    assert [f.rule for f in fs] == ["SD005"]
+    assert "headz" in fs[0].message and "model.py" in fs[0].where
+
+
+def test_cli_shard_injection_exits_nonzero():
+    assert cli_main(["--passes", "shard", "--inject-shard", "axis"]) != 0
+
+
+def test_axis_table_round_trips():
+    parsed = shardspec.parse_axis_table(shardspec.render_axis_table())
+    assert parsed  # and it matches the live rules
+    assert shardspec._check_readme_axes(shardspec.DIST_README) == []
+
+
+# ------------------------------------------------- jaxpr pass (JX001-JX004)
+
+def _jaxpr_injected(inject):
+    entry = jaxpr_audit._injected_entry(inject)
+    return jaxpr_audit._check_entry(entry, abscache.smoke_model(),
+                                    inject)
+
+
+def test_jaxpr_pass_clean_and_shares_abscache():
+    """Every audited serve/train/frontend entry traces clean; the
+    shard pass run just before it hits the shared model cache."""
+    abscache.clear()
+    assert shardspec.run(archs=_SMOKE) == []
+    assert jaxpr_audit.run() == []
+    st = abscache.stats()
+    assert st["smoke_model"]["misses"] == 1     # built once...
+    assert st["config"]["hits"] >= 1            # ...reused across passes
+
+
+def test_jx001_unaliased_donation_flagged():
+    fs = _jaxpr_injected("donation")
+    assert fs and all(f.rule == "JX001" for f in fs)
+
+
+def test_jx002_widening_flagged():
+    fs = _jaxpr_injected("widen")
+    assert fs and all(f.rule == "JX002" for f in fs)
+    assert any("float64" in f.message for f in fs)
+
+
+def test_jx003_callback_flagged():
+    fs = _jaxpr_injected("callback")
+    rules = {f.rule for f in fs}
+    # the debug print is both a banned primitive (JX003) and a debug
+    # effect — an extra channel out of the graph (JX004); both correct
+    assert "JX003" in rules
+
+
+def test_jx004_arity_drift_flagged():
+    fs = _jaxpr_injected("transfer")
+    assert [f.rule for f in fs] == ["JX004"]
+    assert "arity" in fs[0].message
+
+
+def test_cli_jaxpr_injection_exits_nonzero():
+    assert cli_main(["--passes", "jaxpr",
+                     "--inject-jaxpr", "transfer"]) != 0
+
+
+def test_manifest_entries_declare_unique_names():
+    names = [e.name for e in jaxpr_audit.manifest_entries()]
+    assert len(names) == len(set(names)) and len(names) >= 9
+
+
+# ------------------------------------------------- dead suppressions
+
+def test_dead_inline_suppression_is_ra000(tmp_path):
+    fs = _lint(tmp_path, "x = 1   # lint: allow RA002 (stale)\n")
+    assert [f.rule for f in fs] == ["RA000"]
+    assert "dead suppression" in fs[0].message
+
+
+def test_matched_inline_suppression_is_not_dead(tmp_path):
+    fs = _lint(tmp_path, """\
+        import jax
+        x = jax.device_get(1)   # lint: allow RA002 (fixture)
+        """)
+    assert fs == []
+
+
+def test_dead_config_suppression_is_ra000(tmp_path):
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    cfg = tmp_path / "rules.toml"
+    cfg.write_text(textwrap.dedent(f"""\
+        [[suppress]]
+        rule = "RA002"
+        path = "{lint.rel(str(tmp_path))}"
+        reason = "stale fixture"
+        """))
+    fs = lint.run(paths=[str(tmp_path)], config=str(cfg))
+    assert [f.rule for f in fs] == ["RA000"]
+    assert "dead suppression" in fs[0].message
+
+
+def test_config_suppression_outside_scan_is_not_audited(tmp_path):
+    """A --lint-paths subset run must not declare repo-wide
+    suppressions dead: only entries under the scanned trees are
+    audited."""
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    cfg = tmp_path / "rules.toml"
+    cfg.write_text(textwrap.dedent("""\
+        [[suppress]]
+        rule = "RA002"
+        path = "src/somewhere/else.py"
+        reason = "lives outside this scan"
+        """))
+    assert lint.run(paths=[str(tmp_path)], config=str(cfg)) == []
+
+
+# ------------------------------------------------- findings artifact
+
+def test_cli_json_out_writes_findings_document(tmp_path):
+    out = tmp_path / "findings.json"
+    rc = cli_main(["--passes", "lint", "--format", "json",
+                   "--out", str(out)])
+    doc = json.loads(out.read_text())
+    assert rc == 0 and doc["ok"] is True
+    assert doc["passes"][0]["name"] == "lint"
+    assert "seconds" in doc["passes"][0]
+    assert "abscache" in doc
